@@ -1,0 +1,29 @@
+"""Shared benchmark plumbing. One module per paper table/figure."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timeit(fn, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time in µs."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def header() -> None:
+    print("name,us_per_call,derived")

@@ -1,0 +1,45 @@
+"""Kernel-regime benchmarks: the ψ push in its three implementations.
+
+Wall-time on this container measures the XLA-CPU segment-sum path (the CPU
+production path). Pallas kernels execute in interpret mode here — their
+numbers are *correctness-path* timings, flagged ``derived=interpret`` (the
+TPU performance story is the §Roofline analysis, not CPU wall-time).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import load_dataset, powerlaw_configuration
+from repro.core import heterogeneous, build_operators
+from repro.kernels import (build_edge_tiles, build_bsr, DeviceEdgeTiles,
+                           DeviceBsr, edge_spmv, bsr_spmv)
+from .common import emit, timeit
+
+
+def run(quick: bool = False) -> None:
+    g = load_dataset("dblp") if not quick else powerlaw_configuration(
+        2000, 12000, seed=0)
+    act = heterogeneous(g.n, seed=1)
+    ops = build_operators(g, act)
+    s = ops.c
+
+    push = jax.jit(ops.push)
+    us = timeit(lambda: jax.block_until_ready(push(s)), warmup=2, iters=5)
+    emit(f"kernel/xla_segment_push/{g.name}", us,
+         f"m={g.m};gb_s={(g.m * 12 / (us * 1e-6)) / 1e9:.2f}")
+
+    fmt = DeviceEdgeTiles.from_format(build_edge_tiles(g, tile=256))
+    s_pre = s * ops.inv_w
+    us_k = timeit(lambda: jax.block_until_ready(edge_spmv(s_pre, fmt)),
+                  warmup=1, iters=2)
+    pad_ratio = fmt.src_idx.size / max(g.m, 1)
+    emit(f"kernel/edge_tile_pallas/{g.name}", us_k,
+         f"interpret;pad_ratio={pad_ratio:.2f}")
+
+    bfmt_h = build_bsr(g, ts=128, td=128)
+    emit(f"kernel/bsr_occupancy/{g.name}", 0.0,
+         f"occupancy={bfmt_h.occupancy:.4f};"
+         f"tiles={bfmt_h.num_blocks};"
+         f"dense_flops_multiplier={1.0 / max(bfmt_h.occupancy, 1e-9):.0f}x")

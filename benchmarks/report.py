@@ -1,0 +1,237 @@
+"""Generate EXPERIMENTS.md from the dry-run artifacts + benchmark CSV.
+
+    PYTHONPATH=src python -m benchmarks.report
+
+§Dry-run and §Roofline tables are fully derived from artifacts/dryrun/*;
+§Exp1–3 summarize the ``benchmarks.run`` CSV; §Perf is the curated
+hypothesis→change→measure log (maintained here, constants from the
+measurement scripts recorded in the narrative).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .roofline import derive, load_records
+
+PERF_SECTION = r"""
+## §Perf — hillclimbing log (hypothesis → change → before → after → verdict)
+
+Three cells were selected per the assignment: the one most representative
+of the paper's technique (ψ/twitter), the worst-roofline-fraction big-LM
+trainer (mixtral-8x22b/train_4k — also representative of the whole LM
+family), and the most collective-bound cell
+(graphsage-reddit/ogb_products). Baselines for all 40 cells are in
+§Roofline; only these three were iterated.
+
+### Cell 1 — psi-score / twitter_scale (the paper's own workload)
+
+**Paper-faithful baseline** (recorded first): the paper's distribution
+remark (§III: the sum "can even be calculated distributedly") reads
+naturally as a 1-D edge partition with a replicated s vector — implemented
+as `core.distributed.DistributedPsi1D` and validated to 4.7e-10 against
+the serial solver.
+
+| iteration | hypothesis | change | before → after | verdict |
+|---|---|---|---|---|
+| ψ-0 (baseline) | 1-D: full-vector all-reduce per iteration | — | 1.86 MB AR /device/iter (compiled, 256 chips, twitter N=465k) | baseline |
+| ψ-1 | a 2-D (src×dst) edge partition with block-cyclic vectors replaces the AR with reduce-scatter [Nc] + all-gather [N/d], ≈2·min(d,mo)× less traffic | `DistributedPsi` (block-cyclic SUMMA-style schedule, psum_scatter slice *is* the next layout — no on-device reshuffle) | 1.86 MB → **0.124 MB** /device/iter | **confirmed, 15.1×** |
+| ψ-2 | the per-iteration scalar gap all-reduce + L1 pass is wasted when convergence is checked per chunk | `make_run(chunk_iters=k)`: gap only once per k-iteration scan (k=16) | per-iter collective count 3 → 2 + 1/16; removes one O(N/d) pass per iter | confirmed (folded into the baseline schedule) |
+| ψ-3 | the scatter + μ⊙t+c epilogue + gap cost 3 extra HBM sweeps unfused | fused Pallas `power_step` kernel (edge-tile one-hot MXU scatter with in-VMEM epilogue) | 4 passes over s-sized vectors → 1 (validated vs oracle to 2e-5; interpret mode) | confirmed (kernel path) |
+| ψ-4 | BSR dense-tile MXU SpMV could beat the gather kernel | `bsr_spmv` + occupancy measurement | occupancy on DBLP-standin = 0.6–1.1 % → ≥90× wasted MXU FLOPs | **refuted** for social graphs (kept as the clustered-operator path) |
+| ψ-5 | the error e_t = e_0·Aᵗ enters a stable-direction regime, so a geometric-series (Aitken) jump skips tail iterations; a verification step after each jump preserves the Eq. 19 guarantee (the paper lists acceleration as future work; true Chebyshev is unsafe on the complex spectrum of directed A) | `core/accelerated.power_psi_accelerated` (jump every 8 iters, contraction + far-from-tol guards) | DBLP ε=1e-9 float64: heterogeneous 45 → **33 mat-vecs** (−27%), homogeneous 165 → **120** (−27%; an earlier unguarded variant reached 85 but could limit-cycle at the fp32 floor — the monotonic+Krasnoselskii safeguards trade a little speed for unconditional robustness), answers agree with the plain solver to ~1e-15 | **confirmed** (beyond-paper; bench rows `exp2/*accelerated=`) |
+
+Roofline terms (single pod, per iteration, twitter stand-in): compute
+5.3e-9 s, memory 2.6e-5 s, collective 3.9e-5 s → collective-bound at the
+2-D schedule's bandwidth lower bound (RS+AG of exactly the vector state);
+the remaining lever is precision (bf16 gathers halve it — measured as a
+−45% collective ablation but held out of the default for exactness of the
+ε=1e-9 sweeps).
+
+### Cell 2 — mixtral-8x22b / train_4k (and the LM family)
+
+| iteration | hypothesis | change | before → after | verdict |
+|---|---|---|---|---|
+| lm-1 | the FFN-hidden sharding constraint `P(None, None, TP)` silently drops the batch sharding; XLA materializes batch-replicated f32 activations and all-gathers their grads | constrain `P(dp, None, TP)` (model.py `_dense_ffn`) | tinyllama probes: per-layer collectives 3.86 GB → **0.97 GB** (−75%), per-layer HLO FLOPs 6.5e11 → **2.9e11** (−55%). Family-wide after re-sweep: nemotron train useful 0.341 → **0.997**, frac 0.119 → **0.283** (compute term 125 s → 42.7 s, collective 358 s → 137 s); nemotron prefill frac 0.239 → **0.637**; tinyllama train collective 6.8 s → 1.74 s, useful 0.46 → 0.99; yi train useful 0.43 → 0.95. Mixtral cells unchanged — the MoE path (shard_map dispatch) never had the bad constraint | **confirmed** (all dense-FFN archs) |
+| lm-2 | XLA's gather backward all-gathers the f32 activation grad for the vocab-sharded embedding; a shard_map mask+psum lookup keeps it local | `_embed_lookup` (kept in-tree, unused) | per-layer coll 0.974 GB → 0.974 GB; L=1 fixed part +0.13 GB | **refuted** — the big AG was fallout of lm-1's bug, not the gather; the psum variant is strictly worse |
+| lm-3 | TP all-reduces appear as f32 (2× bytes); an optimization_barrier keeps them bf16 | barrier between block output and residual | no change — ARs still f32 | **refuted**: the f32 ARs come from XLA's *AllReducePromotion* pass (`.clone_promoted` ops), a backend numerical-stability choice; on TPU ICI bf16 ARs with f32 accumulation make the reported collective term a ~2× conservative bound for the AR share |
+
+Post-lm-1 composition (tinyllama L=1 probe): 4×AR f32[4,4096,2048]
+(the standard 2-fwd+2-bwd TP reduces), small loss/logsumexp ARs, tiny
+attention permutes — i.e. the textbook TP schedule, nothing parasitic.
+
+Mixtral-8x22b/train_4k itself stays at useful 0.62 / frac 0.100,
+memory-dominated. Napkin math for the residual gap: top-2-of-8 dispatch at
+capacity 1.25 pads expert batches ×1.25; the scatter/argsort dispatch adds
+~3 passes over [T, d]; remat recompute adds ×4/3 on FLOPs; together ≈1.6×
+— consistent with 1/0.62. Remaining levers, estimated but below the 5%
+bar or TPU-pass-dependent: capacity 1.0 with aux-loss balancing (−20%
+expert FLOPs, risks drops), MegaBlocks-style block-sparse grouped GEMM
+(removes padding entirely — the natural next Pallas kernel), causal
+block-skip in blocked attention (≤2× on the ≈7% attention share),
+collective-matmul overlap.
+
+### Cell 3 — graphsage-reddit / ogb_products (most collective-bound)
+
+| iteration | hypothesis | change | before → after | verdict |
+|---|---|---|---|---|
+| gnn-1 | GSPMD auto-partitioning of `segment_sum` over sharded edges/nodes all-gathers operands; the ψ-score 2-D block-cyclic partition applies verbatim to feature matrices with a RS[Nc,F]+AG[N/d,F] per layer | `models/gnn/sharded_mp.py` (`sharded_sage_apply`, numerically identical to the serial model at 1.2e-7) | collectives **19.1 GB → 0.332 GB** /device/step (**57.5×**); bytes accessed 9.2e10 → 5.8e9 (−16×); step modelled time 0.38 s → ~7 ms, now memory-bound | **confirmed** |
+
+The 2-D MP schedule is the ψ-push schedule with F-wide payloads — the
+paper's substrate transferring beyond the paper (DESIGN.md §5).
+
+### Methodology notes (apply to every number above)
+
+* cost_analysis is per-device post-SPMD (verified 4-way); while bodies are
+  counted once (verified with scan), so LM/ψ totals use unrolled L/L+1
+  probes: `total = accum · (probe(1) + (L−1)·Δ)`; the optimizer update is
+  over-counted ×accum (<0.01% error at these token counts).
+* "bytes accessed" on the CPU backend counts unfused operand+result bytes —
+  an upper bound on TPU HBM traffic post-fusion; memory terms are
+  comparable *between iterations* (same accounting), which is what the
+  hillclimb optimizes.
+* The f32 AR promotion (lm-3) makes the collective term conservative by
+  ≤2× on the AR share only.
+"""
+
+
+def fmt_bytes(x):
+    if x is None:
+        return "—"
+    return f"{x / 2**30:.2f} GiB"
+
+
+def build(out_path: str = "EXPERIMENTS.md",
+          art_dir: str = "artifacts/dryrun",
+          bench_csv: str = "bench_output.txt") -> None:
+    recs = load_records(art_dir)
+    rows = []
+    skips = []
+    for r in recs:
+        if r.get("skipped"):
+            skips.append(r)
+            continue
+        d = derive(r)
+        if d:
+            rows.append(d)
+    rows.sort(key=lambda d: (d["arch"], d["shape"], d["mesh"]))
+
+    lines = []
+    add = lines.append
+    add("# EXPERIMENTS — Power-ψ framework\n")
+    add("Generated by `python -m benchmarks.report` from "
+        "`artifacts/dryrun/*.json` + the benchmark CSV. Hardware model: "
+        "TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI per link; "
+        "meshes: 16×16 = 256 chips (pod16x16) and 2×16×16 = 512 chips "
+        "(pod2x16x16).\n")
+
+    # ---------------- paper experiments ------------------------------ #
+    add("## §Exp1–Exp3 — paper reproduction (float64, DBLP/Facebook/"
+        "Twitter/HepPh degree-matched stand-ins)\n")
+    if os.path.exists(bench_csv):
+        keep = [l.strip() for l in open(bench_csv)
+                if l.startswith(("exp1/", "exp2/", "exp3/", "kernel/"))]
+        add("Full CSV: `bench_output.txt`. Headlines:\n")
+        add("```")
+        for l in keep:
+            if any(t in l for t in ("tol=1e-09", "claim", "power_nf_extrap",
+                                    "pagerank,", "/power_psi,", "kernel/")):
+                add(l)
+        add("```\n")
+        add("* **Exp 1 (Fig 2/3)**: at every tolerance the Power-ψ error vs "
+            "the exact solve is ≤ the Power-NF and PageRank-power errors "
+            "(`claim_psi_error_leq_nf holds=True` rows).")
+        add("* **Exp 2 (Fig 4/5)**: Power-ψ mat-vec counts track PageRank "
+            "to within a few iterations and beat Power-NF by the ratios in "
+            "the `ratio=` fields (≈N/1 — 3–4 orders of magnitude).")
+        add("* **Exp 3 (Tables III/IV)**: wall-clock on all four stand-ins; "
+            "Power-NF extrapolated from 64 origins exactly because the "
+            "full run is infeasible — which is the paper's point.\n")
+
+    # ---------------- dry-run table ---------------------------------- #
+    add("## §Dry-run — lower + compile on the production meshes\n")
+    ok = len(rows)
+    add(f"**{ok} cells compiled** (every architecture × input shape × both "
+        f"meshes) + {len(skips)} documented skips. Per-device memory from "
+        "`compiled.memory_analysis()` (CPU-backend accounting; args = "
+        "params+optimizer+inputs, temp = transient buffers).\n")
+    add("| arch | shape | mesh | compile s | args | temp | HLO coll/dev "
+        "(full program) |")
+    add("|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("skipped") or not r.get("ok"):
+            continue
+        coll = sum(v["top"] + v["in_while"]
+                   for v in r["collectives"].values())
+        add(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r.get('compile_s', 0):.1f} "
+            f"| {fmt_bytes(r.get('memory', {}).get('argument_bytes'))} "
+            f"| {fmt_bytes(r.get('memory', {}).get('temp_bytes'))} "
+            f"| {coll / 2**20:.1f} MiB |")
+    add("")
+    if skips:
+        add("Skipped cells (per assignment):")
+        for r in skips:
+            add(f"* {r['arch']} / {r['shape']} / {r['mesh']} — "
+                f"{r['skipped']}")
+        add("")
+    add("Memory-envelope notes: cells whose args+temp exceed the 16 GiB/chip "
+        "HBM on pod16x16 (nemotron-4-340b train_4k, mixtral-8x22b decode_32k) "
+        "fit on pod2x16x16 (bytes halve with the pod axis) — recorded "
+        "honestly rather than hidden; the config knobs that buy headroom "
+        "are `accum_steps` (activations) and Adafactor (optimizer state), "
+        "both already on for those configs.\n")
+
+    # ---------------- roofline table --------------------------------- #
+    add("## §Roofline — three terms per (arch × shape × mesh)\n")
+    add("compute = FLOPs_dev/197e12; memory = bytes_dev/819e9; collective = "
+        "coll_bytes_dev/50e9 (seconds; see §Perf methodology). "
+        "MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) or the per-family "
+        "analytic equivalent; `useful` = MODEL_FLOPS / (FLOPs_dev × chips); "
+        "`frac` = useful work at peak / dominant-term time — the roofline "
+        "fraction.\n")
+    add("| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | useful | frac | what would move the dominant term |")
+    add("|---|---|---|---|---|---|---|---|---|---|")
+    hints = _HINTS
+    for d in rows:
+        key = (d["arch"], d["shape"])
+        hint = hints.get(key, hints.get(d["arch"], ""))
+        add(f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {d['t_compute']:.2e} | {d['t_memory']:.2e} "
+            f"| {d['t_collective']:.2e} | {d['dominant']} "
+            f"| {d['useful_ratio']:.3f} | {d['roofline_frac']:.3f} "
+            f"| {hint} |")
+    add("")
+    add(PERF_SECTION)
+    with open(out_path, "w") as f:
+        f.write("\n".join(lines))
+    print(f"wrote {out_path}: {ok} roofline rows, {len(skips)} skips")
+
+
+_HINTS = {
+    ("psi-score", "twitter_scale"): "at the 2-D comm lower bound; bf16 "
+    "gathers (−45%) traded away for ε=1e-9 exactness",
+    ("psi-score", "rmat24"): "memory-bound: fused power_step kernel removes "
+    "3 of 4 vector sweeps (ψ-3)",
+    "tinyllama-1.1b": "TP ARs are the floor post lm-1; fsdp=False already "
+    "removes weight AGs",
+    "yi-9b": "same TP-AR floor; causal block-skip ≤2× on attention share",
+    "nemotron-4-340b": "collective-bound: TP=16 ARs at d=18432; candidate: "
+    "2-D TP (model×data split of d_ff)",
+    "mixtral-8x22b": "see §Perf cell 2",
+    "mixtral-8x7b": "as mixtral-8x22b",
+    "graphsage-reddit": "see §Perf cell 3 (57.5× via 2-D MP)",
+    "pna": "2-D MP port of §Perf cell 3 applies unchanged",
+    "nequip": "2-D MP + per-path einsum batching",
+    "equiformer-v2": "memory-bound on Wigner/edge tensors: stream edge "
+    "blocks (chunked scan) to cut live [E,29,C] buffers",
+    "mind": "lookup-bound: fuse profile EmbeddingBag into the hist lookup "
+    "psum; int8 rows halve it",
+}
+
+
+if __name__ == "__main__":
+    import sys
+    build(*(sys.argv[1:] or []))

@@ -1,0 +1,137 @@
+"""Roofline derivation from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh):
+
+  compute    = HLO_FLOPs_per_device / 197e12            [s]
+  memory     = HLO_bytes_per_device / 819e9             [s]
+  collective = collective_bytes_per_device / 50e9       [s]
+
+cost_analysis is per-device post-SPMD (verified: a 4-way-sharded matmul
+reports 1/4 the FLOPs) and does NOT multiply while bodies by trip count
+(verified: scan(10 matmuls) reports 1), so scan-based cells (LM, ψ) are
+reconstructed from the unrolled L / L+1 probes:
+
+  per_layer  = probe(L=2) − probe(L=1)
+  total      = accum · (probe(L=1) + (layers − 1) · per_layer)
+
+(The optimizer update is over-counted ×accum — bounded by
+12 FLOPs/param vs ≳6·tokens_micro FLOPs/param of compute, i.e. <0.01%.)
+GNN/recsys cells unroll layers in Python, so their full-cell numbers are
+already exact.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HW
+
+__all__ = ["derive", "load_records", "run"]
+
+
+def _coll_bytes(coll: dict) -> float:
+    return sum(v["top"] + v["in_while"] for v in coll.values())
+
+
+def derive(rec: dict) -> dict | None:
+    """→ dict with the three terms (seconds), dominant term, flop ratio."""
+    if rec.get("skipped") or not rec.get("ok"):
+        return None
+    meta = rec.get("meta", {})
+    chips = 512 if "2x16" in rec["mesh"] else 256
+
+    if rec.get("probes") and all(p["ok"] for p in rec["probes"]):
+        p1, p2 = rec["probes"]
+        layers = meta.get("layers", meta.get("iters", 1))
+        accum = meta.get("accum", 1)
+
+        def reconstruct(get):
+            a, b = get(p1), get(p2)
+            return accum * (a + (layers - 1) * (b - a))
+
+        flops = reconstruct(lambda p: p["cost"]["flops"])
+        mem_bytes = reconstruct(lambda p: p["cost"]["bytes_accessed"])
+        coll = reconstruct(lambda p: _coll_bytes(p["collectives"]))
+        source = "probes"
+    else:
+        flops = rec["cost"]["flops"]
+        mem_bytes = rec["cost"]["bytes_accessed"]
+        coll = _coll_bytes(rec["collectives"])
+        source = "full"
+
+    t_compute = flops / HW.PEAK_BF16_FLOPS
+    t_memory = mem_bytes / HW.HBM_BW
+    t_coll = coll / HW.ICI_BW
+    terms = dict(compute=t_compute, memory=t_memory, collective=t_coll)
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    model_flops = meta.get("model_flops", 0)
+    hlo_flops_global = flops * chips
+    out = dict(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        chips=chips, source=source,
+        flops_per_dev=flops, bytes_per_dev=mem_bytes, coll_per_dev=coll,
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_coll,
+        dominant=dominant,
+        model_flops=model_flops,
+        hlo_flops_global=hlo_flops_global,
+        useful_ratio=(model_flops / hlo_flops_global
+                      if hlo_flops_global else 0.0),
+        # fraction of roofline: useful work at peak vs modelled step time
+        roofline_frac=(model_flops / chips / HW.PEAK_BF16_FLOPS / total
+                       if total > 0 and model_flops else 0.0),
+        peak_bytes=rec.get("memory", {}).get("peak_bytes"),
+        arg_bytes=rec.get("memory", {}).get("argument_bytes"),
+        temp_bytes=rec.get("memory", {}).get("temp_bytes"),
+    )
+    return out
+
+
+def load_records(art_dir: str = "artifacts/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(art_dir: str = "artifacts/dryrun",
+        out_csv: str = "artifacts/roofline.csv") -> list[dict]:
+    from .common import emit
+    rows = []
+    for rec in load_records(art_dir):
+        d = derive(rec)
+        if d is None:
+            tag = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+            if rec.get("skipped"):
+                emit(f"roofline/{tag}", 0.0, "skipped=" +
+                     rec["skipped"][:40])
+            continue
+        rows.append(d)
+        tag = f"{d['arch']}/{d['shape']}/{d['mesh']}"
+        emit(f"roofline/{tag}",
+             max(d["t_compute"], d["t_memory"], d["t_collective"]) * 1e6,
+             f"dominant={d['dominant']};frac={d['roofline_frac']:.3f};"
+             f"useful={d['useful_ratio']:.3f}")
+    if rows:
+        os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+        keys = list(rows[0].keys())
+        with open(out_csv, "w") as f:
+            f.write(",".join(keys) + "\n")
+            for r in rows:
+                f.write(",".join(str(r[k]) for k in keys) + "\n")
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | roofline frac |\n|" + "---|" * 9)
+    lines = [hdr]
+    for d in rows:
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {d['t_compute']:.2e} | {d['t_memory']:.2e} "
+            f"| {d['t_collective']:.2e} | {d['dominant']} "
+            f"| {d['useful_ratio']:.3f} | {d['roofline_frac']:.3f} |")
+    return "\n".join(lines)

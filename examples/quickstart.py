@@ -1,0 +1,52 @@
+"""Quickstart: compute ψ-scores three ways and compare (60 seconds, CPU).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.graphs import powerlaw_configuration
+from repro.core import (heterogeneous, homogeneous, build_operators,
+                        power_psi, power_nf, exact_psi, pagerank,
+                        build_pagerank_ops)
+
+
+def main():
+    # a small social platform: 2 000 users, heavy-tailed follows
+    g = powerlaw_configuration(2000, 14000, seed=42, name="demo")
+    act = heterogeneous(g.n, seed=7)     # per-user posting/re-posting rates
+    ops = build_operators(g, act)
+
+    # 1. the paper's Power-ψ (Alg. 2): one linear system, power iteration
+    res = power_psi(ops, tol=1e-9)
+    print(f"Power-ψ:   {int(res.iterations)} iterations, "
+          f"{int(res.matvecs)} mat-vecs")
+
+    # 2. exact solve (the oracle)
+    psi_true, _ = exact_psi(g, act)
+    err = np.linalg.norm(res.psi - psi_true) / np.linalg.norm(psi_true)
+    print(f"            rel. error vs exact: {err:.2e}")
+
+    # 3. the pre-paper baseline (Alg. 1: N systems) on a few origins
+    nf = power_nf(ops, tol=1e-9, origins=np.arange(64))
+    print(f"Power-NF:  {nf.matvecs} mat-vecs for just 64 of {g.n} users "
+          f"(×{g.n // 64} more to finish) — the problem the paper fixes")
+
+    # 4. homogeneous activity ⇒ ψ == PageRank (Thm 5 of [10])
+    ops_h = build_operators(g, homogeneous(g.n))
+    psi_h = power_psi(ops_h, tol=1e-12).psi
+    pr = pagerank(build_pagerank_ops(g), alpha=0.85, tol=1e-12).pi
+    print(f"ψ(homog) vs PageRank max diff: "
+          f"{float(abs(np.asarray(psi_h) - np.asarray(pr)).max()):.2e}")
+
+    top = np.argsort(-np.asarray(res.psi))[:5]
+    print("top-5 influencers:", top.tolist())
+    print("  ψ:", np.round(np.asarray(res.psi)[top], 6).tolist())
+    print("  in-degree:", g.in_degree[top].tolist(),
+          " (rank ≠ pure popularity — activity matters)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .registry import ShapeCfg, ArchEntry, get_arch, list_archs, ARCHS

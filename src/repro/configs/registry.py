@@ -1,0 +1,109 @@
+"""Architecture registry: ``--arch <id>`` → config + shapes + family glue.
+
+Every assigned architecture (10) plus the paper's own ``psi`` configs are
+selectable here. ``reduced=True`` returns the CPU-smoke variant of the same
+family (small widths/depths, tiny vocab/tables/graphs) used by tests; the
+full configs are exercised via the dry-run only (ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+__all__ = ["ShapeCfg", "ArchEntry", "get_arch", "list_archs", "ARCHS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    kind: str                  # train | prefill | decode | full_graph |
+    #                            minibatch | molecule | serve | retrieval
+    params: dict[str, Any]
+    skip: str | None = None    # reason, if this (arch, shape) is skipped
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    arch_id: str
+    family: str                # lm | gnn | recsys | psi
+    module: str                # configs module defining config(reduced)
+    shapes: tuple[ShapeCfg, ...]
+
+    def config(self, reduced: bool = False):
+        mod = importlib.import_module(self.module)
+        return mod.config(reduced=reduced)
+
+
+def _lm_shapes(*, full_attention: bool) -> tuple[ShapeCfg, ...]:
+    skip = ("pure full-attention arch: 500k dense decode excluded per "
+            "assignment; sub-quadratic (SWA) archs run it"
+            if full_attention else None)
+    return (
+        ShapeCfg("train_4k", "train", dict(seq_len=4096, global_batch=256)),
+        ShapeCfg("prefill_32k", "prefill",
+                 dict(seq_len=32768, global_batch=32)),
+        ShapeCfg("decode_32k", "decode",
+                 dict(seq_len=32768, global_batch=128)),
+        ShapeCfg("long_500k", "decode",
+                 dict(seq_len=524288, global_batch=1), skip=skip),
+    )
+
+
+_GNN_SHAPES = (
+    ShapeCfg("full_graph_sm", "full_graph",
+             dict(n_nodes=2708, n_edges=10556, d_feat=1433)),
+    ShapeCfg("minibatch_lg", "minibatch",
+             dict(n_nodes=232965, n_edges=114615892, batch_nodes=1024,
+                  fanout=(15, 10))),
+    ShapeCfg("ogb_products", "full_graph",
+             dict(n_nodes=2449029, n_edges=61859140, d_feat=100)),
+    ShapeCfg("molecule", "molecule",
+             dict(n_nodes=30, n_edges=64, batch=128)),
+)
+
+_RECSYS_SHAPES = (
+    ShapeCfg("train_batch", "train", dict(batch=65536)),
+    ShapeCfg("serve_p99", "serve", dict(batch=512)),
+    ShapeCfg("serve_bulk", "serve", dict(batch=262144)),
+    ShapeCfg("retrieval_cand", "retrieval",
+             dict(batch=1, n_candidates=1_000_000)),
+)
+
+_PSI_SHAPES = (
+    ShapeCfg("twitter_scale", "psi_iterate", dict(dataset="twitter")),
+    ShapeCfg("rmat24", "psi_iterate", dict(dataset="rmat24")),
+)
+
+ARCHS: dict[str, ArchEntry] = {
+    e.arch_id: e for e in [
+        ArchEntry("tinyllama-1.1b", "lm", "repro.configs.tinyllama_1_1b",
+                  _lm_shapes(full_attention=True)),
+        ArchEntry("yi-9b", "lm", "repro.configs.yi_9b",
+                  _lm_shapes(full_attention=True)),
+        ArchEntry("nemotron-4-340b", "lm", "repro.configs.nemotron_4_340b",
+                  _lm_shapes(full_attention=True)),
+        ArchEntry("mixtral-8x22b", "lm", "repro.configs.mixtral_8x22b",
+                  _lm_shapes(full_attention=False)),
+        ArchEntry("mixtral-8x7b", "lm", "repro.configs.mixtral_8x7b",
+                  _lm_shapes(full_attention=False)),
+        ArchEntry("pna", "gnn", "repro.configs.pna", _GNN_SHAPES),
+        ArchEntry("equiformer-v2", "gnn", "repro.configs.equiformer_v2",
+                  _GNN_SHAPES),
+        ArchEntry("nequip", "gnn", "repro.configs.nequip", _GNN_SHAPES),
+        ArchEntry("graphsage-reddit", "gnn", "repro.configs.graphsage_reddit",
+                  _GNN_SHAPES),
+        ArchEntry("mind", "recsys", "repro.configs.mind", _RECSYS_SHAPES),
+        ArchEntry("psi-score", "psi", "repro.configs.psi_score", _PSI_SHAPES),
+    ]
+}
+
+
+def get_arch(arch_id: str) -> ArchEntry:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)

@@ -1,0 +1,49 @@
+"""User activity models: posting rate λ and re-posting rate μ per user.
+
+The paper evaluates two regimes (§V):
+  (i)  heterogeneous — λ, μ i.i.d. uniform in (0, 1);
+  (ii) homogeneous   — λ = 0.15, μ = 0.85 for everyone, in which case
+       ψ == PageRank with damping α = μ/(λ+μ) = 0.85 ([10, Thm 5]).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["Activity", "heterogeneous", "homogeneous"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Activity:
+    lam: np.ndarray  # posting frequency λ^(n) > 0
+    mu: np.ndarray   # re-posting frequency μ^(n) > 0
+
+    def __post_init__(self):
+        if self.lam.shape != self.mu.shape:
+            raise ValueError("λ/μ shape mismatch")
+        if np.any(self.lam < 0) or np.any(self.mu < 0):
+            raise ValueError("activity rates must be non-negative")
+
+    @property
+    def n(self) -> int:
+        return int(self.lam.shape[0])
+
+    @property
+    def total(self) -> np.ndarray:
+        return self.lam + self.mu
+
+    def astype(self, dtype) -> "Activity":
+        return Activity(self.lam.astype(dtype), self.mu.astype(dtype))
+
+
+def heterogeneous(n: int, *, seed: int = 0, low: float = 1e-3,
+                  high: float = 1.0) -> Activity:
+    """i.i.d. uniform rates in (low, high) — regime (i) of the paper."""
+    rng = np.random.default_rng(seed)
+    return Activity(rng.uniform(low, high, n), rng.uniform(low, high, n))
+
+
+def homogeneous(n: int, *, lam: float = 0.15, mu: float = 0.85) -> Activity:
+    """Uniform rates — regime (ii); ψ reduces to PageRank(α=μ/(λ+μ))."""
+    return Activity(np.full(n, lam), np.full(n, mu))

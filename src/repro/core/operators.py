@@ -1,0 +1,163 @@
+"""Edge-form ψ-score operators.
+
+All four matrices of the paper (Table I) are functions of the edge list and
+the activity rates, and every product the algorithms need reduces to one
+gather → segment-sum → scale pattern:
+
+    w_j       = Σ_{ℓ∈L(j)} (λ_ℓ + μ_ℓ)                    (news-feed rate)
+    A[j, i]   = μ_i / w_j   · 1{i ∈ L(j)}
+    B[j, i]   = λ_i / w_j   · 1{i ∈ L(j)}
+    c_i       = μ_i / (λ_i + μ_i)
+    d_i       = λ_i / (λ_i + μ_i)
+
+Left mat-vec (Power-ψ):   (sᵀA)_i = μ_i Σ_{(j→i)∈E} s_j / w_j
+Right mat-vec (Power-NF): (A p)_j = (1/w_j) Σ_{(j→i)∈E} μ_i p_i
+
+Both share the gather/scatter; only the scatter axis differs (dst vs src).
+We therefore store the edge list twice, each sorted by its scatter axis, so
+XLA's scatter runs in sorted mode.
+
+Nodes with no leaders (w_j = 0) have empty A/B rows — handled by a masked
+reciprocal, exactly matching the linear-system semantics of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.structure import Graph
+from .activity import Activity
+
+__all__ = ["PsiOperators", "build_operators"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PsiOperators:
+    """Device-resident edge-form operators for one (graph, activity) pair."""
+
+    n: int
+    m: int
+    # edges sorted by dst — scatter axis of the left mat-vec
+    src_by_dst: jax.Array  # int32[M]
+    dst_by_dst: jax.Array  # int32[M]
+    # edges sorted by src — scatter axis of the right mat-vec
+    src_by_src: jax.Array  # int32[M]
+    dst_by_src: jax.Array  # int32[M]
+    lam: jax.Array         # f[N]
+    mu: jax.Array          # f[N]
+    inv_w: jax.Array       # f[N], 0 where w == 0
+    c: jax.Array           # f[N] = μ/(λ+μ)
+    d: jax.Array           # f[N] = λ/(λ+μ)
+    b_norm: jax.Array      # scalar ‖B‖ used by Alg. 2's termination rule
+
+    # ------------------------------------------------------------------ #
+    @property
+    def dtype(self):
+        return self.lam.dtype
+
+    def push(self, s: jax.Array) -> jax.Array:
+        """Shared left gather/scatter: t_i = Σ_{(j→i)} s_j / w_j.
+
+        ``sᵀA = μ ⊙ t`` and ``sᵀB = λ ⊙ t`` — one scatter serves both, which
+        is the fused epilogue trick recorded in EXPERIMENTS.md §Perf.
+        """
+        contrib = (s * self.inv_w)[self.src_by_dst]
+        return jax.ops.segment_sum(contrib, self.dst_by_dst, self.n,
+                                   indices_are_sorted=True)
+
+    def left_matvec(self, s: jax.Array) -> jax.Array:
+        """sᵀA as a column vector."""
+        return self.mu * self.push(s)
+
+    def psi_epilogue(self, s: jax.Array) -> jax.Array:
+        """ψᵀ = (sᵀB + dᵀ)/N  (Eq. 12 epilogue)."""
+        return (self.lam * self.push(s) + self.d) / self.n
+
+    def right_matvec(self, p: jax.Array) -> jax.Array:
+        """A p — used by the Power-NF baseline. Supports batched p [N, K]."""
+        vals = (self.mu * p.T).T[self.dst_by_src]
+        agg = jax.ops.segment_sum(vals, self.src_by_src, self.n,
+                                  indices_are_sorted=True)
+        return (self.inv_w * agg.T).T
+
+    def b_columns(self, origins: jax.Array) -> jax.Array:
+        """Dense [N, K] slice of B for a chunk of origin users (Power-NF)."""
+        k = origins.shape[0]
+        # edge (j -> i): b[j, col] = λ_i / w_j where i == origins[col]
+        hit = self.dst_by_src[:, None] == origins[None, :]        # [M, K]
+        vals = jnp.where(hit, self.lam[self.dst_by_src][:, None], 0.0)
+        agg = jax.ops.segment_sum(vals, self.src_by_src, self.n,
+                                  indices_are_sorted=True)         # [N, K]
+        return (self.inv_w[:, None] * agg).astype(self.dtype)
+
+
+jax.tree_util.register_dataclass(
+    PsiOperators,
+    data_fields=["src_by_dst", "dst_by_dst", "src_by_src", "dst_by_src",
+                 "lam", "mu", "inv_w", "c", "d", "b_norm"],
+    meta_fields=["n", "m"],
+)
+
+
+def _induced_l1T_norm(n, src, dst, lam, inv_w) -> np.ndarray:
+    """max_j Σ_{i∈L(j)} λ_i / w_j — the operator norm with ‖sᵀB‖₁ ≤ ‖B‖‖s‖₁."""
+    row = np.zeros(n, lam.dtype)
+    np.add.at(row, src, lam[dst])
+    return (row * inv_w).max() if n else np.asarray(0.0, lam.dtype)
+
+
+def build_operators(graph: Graph, activity: Activity, *,
+                    dtype=jnp.float32) -> PsiOperators:
+    """Precompute the edge-form operators on host, then place on device."""
+    if activity.n != graph.n:
+        raise ValueError("activity/graph size mismatch")
+    np_dtype = np.dtype(jnp.dtype(dtype).name)
+    lam = activity.lam.astype(np_dtype)
+    mu = activity.mu.astype(np_dtype)
+    total = lam + mu
+    # w_j = Σ_{leaders i of j} (λ_i + μ_i): scatter (λ+μ)[dst] onto src
+    w = np.zeros(graph.n, np_dtype)
+    np.add.at(w, graph.src, total[graph.dst])
+    inv_w = np.where(w > 0, 1.0 / np.where(w > 0, w, 1.0), 0.0).astype(np_dtype)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        c = np.where(total > 0, mu / total, 0.0).astype(np_dtype)
+        d = np.where(total > 0, lam / total, 0.0).astype(np_dtype)
+    b_norm = _induced_l1T_norm(graph.n, graph.src, graph.dst, lam, inv_w)
+
+    s_d, d_d = graph.edges_by_dst
+    s_s, d_s = graph.edges_by_src
+    dev = partial(jnp.asarray)
+    return PsiOperators(
+        n=graph.n, m=graph.m,
+        src_by_dst=dev(s_d), dst_by_dst=dev(d_d),
+        src_by_src=dev(s_s), dst_by_src=dev(d_s),
+        lam=dev(lam), mu=dev(mu), inv_w=dev(inv_w),
+        c=dev(c), d=dev(d),
+        b_norm=jnp.asarray(b_norm, dtype),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# Dense forms — oracles for tests and the exact solver (small N only).
+# ---------------------------------------------------------------------- #
+def dense_operators(graph: Graph, activity: Activity):
+    """Return (A, B, c, d) as dense float64 numpy arrays."""
+    n = graph.n
+    lam = activity.lam.astype(np.float64)
+    mu = activity.mu.astype(np.float64)
+    total = lam + mu
+    w = np.zeros(n)
+    np.add.at(w, graph.src, total[graph.dst])
+    inv_w = np.where(w > 0, 1.0 / np.where(w > 0, w, 1.0), 0.0)
+    A = np.zeros((n, n))
+    B = np.zeros((n, n))
+    A[graph.src, graph.dst] = mu[graph.dst] * inv_w[graph.src]
+    B[graph.src, graph.dst] = lam[graph.dst] * inv_w[graph.src]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        c = np.where(total > 0, mu / total, 0.0)
+        d = np.where(total > 0, lam / total, 0.0)
+    return A, B, c, d

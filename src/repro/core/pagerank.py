@@ -1,0 +1,85 @@
+"""PageRank power method (Eq. 22) — the speed yardstick of the paper.
+
+πᵀ_t = α πᵀ_{t−1} W + (1−α)/N 1ᵀ with W = D_out⁻¹ L (row-normalized
+follower→leader adjacency; rows of dangling users are zero, making W
+sub-stochastic — exactly the structure ψ's A has in the homogeneous case,
+so ψ(λ=const, μ=const) == PageRank(α = μ/(λ+μ)) holds verbatim [10, Thm 5].
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.structure import Graph
+
+__all__ = ["PageRankResult", "PageRankOps", "build_pagerank_ops", "pagerank"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PageRankOps:
+    n: int
+    src_by_dst: jax.Array
+    dst_by_dst: jax.Array
+    inv_outdeg: jax.Array   # 1/outdeg, 0 for dangling
+
+
+jax.tree_util.register_dataclass(
+    PageRankOps, data_fields=["src_by_dst", "dst_by_dst", "inv_outdeg"],
+    meta_fields=["n"])
+
+
+@dataclasses.dataclass(frozen=True)
+class PageRankResult:
+    pi: jax.Array
+    iterations: jax.Array
+    gap: jax.Array
+    converged: jax.Array
+    matvecs: jax.Array
+
+
+def build_pagerank_ops(graph: Graph, *, dtype=jnp.float32) -> PageRankOps:
+    np_dtype = np.dtype(jnp.dtype(dtype).name)
+    outdeg = graph.out_degree.astype(np_dtype)
+    inv = np.where(outdeg > 0, 1.0 / np.where(outdeg > 0, outdeg, 1), 0.0)
+    s_d, d_d = graph.edges_by_dst
+    return PageRankOps(n=graph.n, src_by_dst=jnp.asarray(s_d),
+                       dst_by_dst=jnp.asarray(d_d),
+                       inv_outdeg=jnp.asarray(inv.astype(np_dtype)))
+
+
+def pagerank(ops: PageRankOps, *, alpha: float = 0.85, tol: float = 1e-9,
+             max_iter: int = 10_000, pi0: jax.Array | None = None
+             ) -> PageRankResult:
+    dtype = ops.inv_outdeg.dtype
+    teleport = jnp.asarray((1.0 - alpha) / ops.n, dtype)
+    a = jnp.asarray(alpha, dtype)
+
+    def step(pi):
+        contrib = (pi * ops.inv_outdeg)[ops.src_by_dst]
+        agg = jax.ops.segment_sum(contrib, ops.dst_by_dst, ops.n,
+                                  indices_are_sorted=True)
+        return a * agg + teleport
+
+    @jax.jit
+    def run(pi_init):
+        def cond(state):
+            _, gap, t = state
+            return (gap > tol) & (t < max_iter)
+
+        def body(state):
+            pi, _, t = state
+            pi_new = step(pi)
+            return pi_new, jnp.sum(jnp.abs(pi_new - pi)), t + 1
+
+        return jax.lax.while_loop(
+            cond, body, (pi_init, jnp.asarray(jnp.inf, dtype),
+                         jnp.asarray(0, jnp.int32)))
+
+    init = (jnp.full((ops.n,), 1.0 / ops.n, dtype)
+            if pi0 is None else jnp.asarray(pi0, dtype))
+    pi, gap, t = run(init)
+    return PageRankResult(pi=pi, iterations=t, gap=gap,
+                          converged=gap <= tol, matvecs=t)

@@ -1,0 +1,81 @@
+"""Power-NF (Algorithm 1 of [10]) — the state-of-the-art baseline.
+
+Solves the news-feed fixed point ``p_i = A p_i + b_i`` *per origin user i*
+(N systems of size N), then maps to walls via ``q_i = C p_i + d_i`` and
+averages to get ψ_i. This is the method the paper beats; we implement it
+faithfully so Experiments 1–3 can reproduce the comparison.
+
+Faithfulness notes:
+  * each origin has its *own* convergence loop (per-column gap & stop);
+  * the mat-vec count is per-origin — a chunk iteration with K active
+    columns costs K mat-vecs, matching a sequential Alg. 1 run;
+  * chunking over origins is purely an execution-layout choice (the paper's
+    own library loops origins one by one; we vectorize the loop body).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .operators import PsiOperators
+
+__all__ = ["PowerNFResult", "power_nf"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerNFResult:
+    psi: np.ndarray
+    matvecs: int            # total N-vector mat-vecs across all origins
+    max_iterations: int     # worst per-origin iteration count
+
+
+@partial(jax.jit, static_argnames=("tol", "max_iter"))
+def _chunk_solve(ops: PsiOperators, origins: jax.Array, *, tol: float,
+                 max_iter: int):
+    """Solve p_i = A p_i + b_i for a chunk of origins, per-column stopping."""
+    bc = ops.b_columns(origins)                     # [N, K]
+    k = origins.shape[0]
+
+    def cond(state):
+        _, active, _, t = state
+        return jnp.any(active) & (t < max_iter)
+
+    def body(state):
+        p, active, matvecs, t = state
+        p_new = ops.right_matvec(p) + bc            # [N, K]
+        gaps = jnp.sum(jnp.abs(p_new - p), axis=0)  # per-column L1 (paper)
+        p = jnp.where(active[None, :], p_new, p)    # frozen columns keep value
+        matvecs = matvecs + jnp.sum(active, dtype=jnp.int32)
+        active = active & (gaps > tol)
+        return p, active, matvecs, t + 1
+
+    p0 = bc                                          # Alg. 1: p_i ← b_i
+    state = (p0, jnp.ones((k,), bool), jnp.asarray(0, jnp.int32),
+             jnp.asarray(0, jnp.int32))
+    p, _, matvecs, t = jax.lax.while_loop(cond, body, state)
+    # ψ_i = (1/N)(Σ_n c_n p_i^(n) + d_i)   [q_i = C p_i + d_i, then average]
+    psi = (ops.c @ p + ops.d[origins]) / ops.n
+    return psi, matvecs, t
+
+
+def power_nf(ops: PsiOperators, *, tol: float = 1e-9, max_iter: int = 10_000,
+             chunk: int = 256, origins: np.ndarray | None = None
+             ) -> PowerNFResult:
+    """Run Algorithm 1 for all origins (or a subset) in column chunks."""
+    all_origins = (np.arange(ops.n, dtype=np.int32)
+                   if origins is None else np.asarray(origins, np.int32))
+    psi = np.zeros(all_origins.shape[0], np.dtype(jnp.dtype(ops.dtype).name))
+    total_mv = 0
+    worst_t = 0
+    for lo in range(0, all_origins.shape[0], chunk):
+        sel = all_origins[lo:lo + chunk]
+        p_chunk, mv, t = _chunk_solve(ops, jnp.asarray(sel), tol=tol,
+                                      max_iter=max_iter)
+        psi[lo:lo + sel.shape[0]] = np.asarray(p_chunk)
+        total_mv += int(mv)
+        worst_t = max(worst_t, int(t))
+    return PowerNFResult(psi=psi, matvecs=total_mv, max_iterations=worst_t)

@@ -1,0 +1,7 @@
+"""Graph substrate: structure, generators, datasets, partitioning, sampling."""
+from .structure import Graph
+from .generators import erdos_renyi, barabasi_albert, powerlaw_configuration, rmat
+from .datasets import load_dataset, DATASETS
+
+__all__ = ["Graph", "erdos_renyi", "barabasi_albert",
+           "powerlaw_configuration", "rmat", "load_dataset", "DATASETS"]

@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init); everything below may import jax freely.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production meshes and dump memory/cost/collective artifacts.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh both --out artifacts/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Per cell the artifact JSON records:
+  * ok / error, compile seconds,
+  * cost_analysis flops & bytes (plus L and L+1 probe values → per-layer
+    deltas for the scan-aware roofline),
+  * memory_analysis per-device bytes (argument/output/temp/peak),
+  * per-collective-type byte counts parsed from the post-SPMD HLO, split
+    by whether the op sits inside a while body (→ multiplied by the
+    config's trip count in the roofline).
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from ..configs.registry import ARCHS, get_arch
+from .mesh import make_production_mesh
+from .specs import Cell, build_cell
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-type {top: bytes, in_while: bytes, count} from post-SPMD HLO.
+
+    Two passes: (1) collect while-body computation names from ``body=``
+    attributes; (2) attribute each collective's result bytes to top-level
+    or while-body scope. (While bodies execute trip-count times; the
+    roofline uses unrolled probes for exact per-iteration numbers and this
+    split as the cross-check.)
+    """
+    body_names = set(_BODY_RE.findall(hlo_text))
+    out = {c: dict(top=0, in_while=0, count=0) for c in _COLLECTIVES}
+    computation = ""
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if (stripped.startswith("%") or stripped.startswith("ENTRY")) \
+                and stripped.endswith("{"):
+            name = stripped.split()[0].lstrip("%")
+            if stripped.startswith("ENTRY"):
+                name = stripped.split()[1].lstrip("%") \
+                    if len(stripped.split()) > 1 else "entry"
+            computation = name.split("(")[0]
+            continue
+        for coll in _COLLECTIVES:
+            if f" {coll}(" in stripped or f"{coll}-start(" in stripped:
+                lhs = stripped.split(f" {coll}")[0]
+                b = _shape_bytes(lhs)
+                key = ("in_while" if computation in body_names else "top")
+                out[coll][key] += b
+                out[coll]["count"] += 1
+                break
+    return out
+
+
+def run_cell(cell: Cell, mesh, mesh_name: str, *, with_probes: bool = True,
+             print_analysis: bool = False) -> dict:
+    rec = dict(arch=cell.arch, shape=cell.shape, mesh=mesh_name,
+               meta={k: v for k, v in cell.meta.items()}, ok=False)
+    try:
+        t0 = time.time()
+        jfn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                      out_shardings=cell.out_shardings)
+        lowered = jfn.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rec.update(lower_s=round(t_lower, 2), compile_s=round(t_compile, 2))
+
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = dict(flops=float(ca.get("flops", 0.0)),
+                           bytes_accessed=float(ca.get("bytes accessed",
+                                                       0.0)))
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = dict(
+                argument_bytes=int(ma.argument_size_in_bytes),
+                output_bytes=int(ma.output_size_in_bytes),
+                temp_bytes=int(ma.temp_size_in_bytes),
+                peak_bytes=int(ma.peak_memory_in_bytes),
+                generated_code_bytes=int(ma.generated_code_size_in_bytes))
+            if print_analysis:
+                print(f"  memory_analysis: peak={ma.peak_memory_in_bytes:,}"
+                      f" args={ma.argument_size_in_bytes:,}"
+                      f" temp={ma.temp_size_in_bytes:,}")
+        except Exception as e:  # pragma: no cover
+            rec["memory_error"] = repr(e)
+        hlo = compiled.as_text()
+        rec["collectives"] = parse_collectives(hlo)
+        rec["hlo_bytes"] = len(hlo)
+        if print_analysis:
+            print(f"  cost_analysis: flops={rec['cost']['flops']:.3e} "
+                  f"bytes={rec['cost']['bytes_accessed']:.3e}")
+        rec["ok"] = True
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-3000:]
+        return rec
+
+    if with_probes and cell.probes:
+        rec["probes"] = []
+        for pc in cell.probes:
+            pr = run_cell(pc, mesh, mesh_name, with_probes=False)
+            rec["probes"].append(dict(
+                layers=pc.meta.get("layers", pc.meta.get("iters")),
+                ok=pr["ok"], cost=pr.get("cost"),
+                collectives=pr.get("collectives"),
+                error=pr.get("error")))
+    return rec
+
+
+def iter_cells(arch_ids, shape_filter=None):
+    for arch_id in arch_ids:
+        entry = get_arch(arch_id)
+        for shape in entry.shapes:
+            if shape_filter and shape.name != shape_filter:
+                continue
+            yield entry, shape
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-probes", action="store_true")
+    args = ap.parse_args()
+
+    arch_ids = [args.arch] if args.arch else sorted(ARCHS)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("pod2x16x16", make_production_mesh(multi_pod=True)))
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_fail = n_skip = 0
+    for entry, shape in iter_cells(arch_ids, args.shape):
+        for mesh_name, mesh in meshes:
+            tag = f"{entry.arch_id}__{shape.name}__{mesh_name}"
+            path = os.path.join(args.out, tag + ".json")
+            if shape.skip:
+                rec = dict(arch=entry.arch_id, shape=shape.name,
+                           mesh=mesh_name, skipped=shape.skip, ok=True)
+                n_skip += 1
+            else:
+                print(f"[dryrun] {tag}", flush=True)
+                try:
+                    cell = build_cell(entry, shape, mesh)
+                except Exception as e:
+                    rec = dict(arch=entry.arch_id, shape=shape.name,
+                               mesh=mesh_name, ok=False,
+                               error=f"build: {type(e).__name__}: {e}",
+                               traceback=traceback.format_exc()[-3000:])
+                    n_fail += 1
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"  BUILD FAIL: {rec['error']}")
+                    continue
+                rec = run_cell(cell, mesh, mesh_name,
+                               with_probes=not args.no_probes,
+                               print_analysis=True)
+                if rec["ok"]:
+                    n_ok += 1
+                    print(f"  ok ({rec.get('compile_s', 0):.1f}s compile)")
+                else:
+                    n_fail += 1
+                    print(f"  FAIL: {rec['error']}")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,491 @@
+"""Cell builders: (arch × shape × mesh) → jit-able fn + arg structs +
+shardings + roofline metadata.
+
+Every assigned architecture/shape pair becomes a ``Cell``; ``dryrun.py``
+lowers & compiles it, and ``benchmarks/roofline.py`` combines the compiled
+cost/memory analyses with the ``probe`` cells (layer-count L and L+1
+variants) to get exact per-layer FLOPs — XLA's cost analysis does not
+multiply while-loop bodies by trip count, so scan-based models need the
+differential probe (measured: scan(10 matmuls) reports 1 matmul of FLOPs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.registry import ArchEntry, ShapeCfg
+from ..models.transformer import model as lm
+from ..models.gnn import sage, pna, nequip, equiformer_v2
+from ..models.gnn.common import GraphBatch
+from ..models.recsys import mind
+from ..train import optim
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple                        # pytree of ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any
+    meta: dict                         # model_flops, multipliers, notes
+    probes: list["Cell"] | None = None  # L / L+1 differential probes
+
+
+def _ns(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh):
+    return int(np.prod([mesh.shape[a] for a in _dp(mesh)]))
+
+
+def _batch_spec(mesh, batch, *trailing):
+    dp = _dp(mesh)
+    if batch % max(1, _dp_size(mesh)) == 0:
+        return P(dp, *trailing)
+    return P(None, *trailing)
+
+
+# ===================================================================== #
+# LM family
+# ===================================================================== #
+def _lm_param_structs(cfg):
+    return jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+def _opt_for(cfg):
+    sched = optim.cosine_schedule(3e-4, 10_000, 200)
+    if cfg.optimizer == "adafactor":
+        return optim.adafactor(sched)
+    return optim.adamw(sched)
+
+
+def _opt_state_specs(cfg, pspecs, pstructs):
+    """Optimizer state shardings mirroring the parameter shardings."""
+    if cfg.optimizer == "adafactor":
+        def stats_spec(spec, pstruct):
+            nd = len(pstruct.shape)
+            sp = list(spec) + [None] * (nd - len(spec))
+            factored = (nd >= 2 and pstruct.shape[-1] >= 8
+                        and pstruct.shape[-2] >= 8)
+            if factored:
+                return dict(vr=P(*sp[:-1]), vc=P(*(sp[:-2] + [sp[-1]])))
+            return dict(v=P(*sp))
+
+        stats = jax.tree.map(stats_spec, pspecs, pstructs,
+                             is_leaf=lambda x: isinstance(x, P))
+        return dict(step=P(), stats=stats)
+    # adamw
+    return dict(step=P(), m=pspecs, v=pspecs, master=pspecs)
+
+
+def _effective_accum(cfg, mesh, batch):
+    a = cfg.accum_steps
+    dp = max(1, _dp_size(mesh))
+    while a > 1 and (batch % a != 0 or (batch // a) % dp != 0):
+        a //= 2
+    return max(1, a)
+
+
+def build_lm_cell(entry: ArchEntry, shape: ShapeCfg, mesh,
+                  *, probe_layers: int | None = None) -> Cell:
+    cfg = entry.config()
+    p = shape.params
+    if probe_layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=probe_layers, accum_steps=1,
+                                  unroll_layers=True)
+    batch = p["global_batch"]
+    seq = p["seq_len"]
+    dp = _dp(mesh)
+
+    pstructs = _lm_param_structs(cfg)
+    pspecs = lm.param_specs(cfg, mesh)
+    pshard = _ns(mesh, pspecs)
+
+    if shape.kind == "train":
+        cfg = (cfg if probe_layers is not None else dataclasses.replace(
+            cfg, accum_steps=_effective_accum(cfg, mesh, batch)))
+        if probe_layers is not None:
+            batch = max(_dp_size(mesh), batch // max(
+                1, _effective_accum(entry.config(), mesh, batch)))
+        opt = _opt_for(cfg)
+        ostructs = jax.eval_shape(opt.init, pstructs)
+        ospecs = _opt_state_specs(cfg, pspecs, pstructs)
+        oshard = _ns(mesh, ospecs)
+        bspec = dict(tokens=_batch_spec(mesh, batch, None),
+                     labels=_batch_spec(mesh, batch, None))
+        bstructs = dict(tokens=SDS((batch, seq), jnp.int32),
+                        labels=SDS((batch, seq), jnp.int32))
+        fn = lm.make_train_step(cfg, mesh, opt)
+        tokens = batch * seq
+        eff_ctx = min(seq, cfg.sliding_window or seq)
+        attn_flops = 6 * tokens * eff_ctx * cfg.q_dim   # fwd 2·T·ctx·d, ×3 bwd
+        meta = dict(kind="train",
+                    model_flops=6 * lm.active_params(cfg) * tokens
+                    + attn_flops,
+                    layers=cfg.n_layers, accum=cfg.accum_steps,
+                    tokens=tokens, params=lm.count_params(cfg))
+        return Cell(entry.arch_id, shape.name, fn,
+                    (pstructs, ostructs, bstructs),
+                    (pshard, oshard, _ns(mesh, bspec)),
+                    (pshard, oshard, None), meta)
+
+    if shape.kind == "prefill":
+        fn = lm.make_prefill(cfg, mesh)
+        bstructs = SDS((batch, seq), jnp.int32)
+        bspec = _batch_spec(mesh, batch, None)
+        c = min(seq, cfg.sliding_window or seq)
+        cache_spec = dict(
+            k=P(None, *_batch_spec(mesh, batch, None, None, None)),
+            v=P(None, *_batch_spec(mesh, batch, None, None, None)),
+            pos=_batch_spec(mesh, batch, None), t=P())
+        eff_ctx = min(seq, cfg.sliding_window or seq)
+        meta = dict(kind="prefill",
+                    model_flops=2 * lm.active_params(cfg) * batch * seq
+                    + 2 * batch * seq * eff_ctx * cfg.q_dim,
+                    layers=cfg.n_layers, tokens=batch * seq,
+                    params=lm.count_params(cfg))
+        return Cell(entry.arch_id, shape.name, fn, (pstructs, bstructs),
+                    (pshard, NamedSharding(mesh, bspec)),
+                    (_ns(mesh, cache_spec), NamedSharding(
+                        mesh, _batch_spec(mesh, batch, None))), meta)
+
+    # decode
+    fn = lm.make_decode_step(cfg, mesh)
+    c = min(seq, cfg.sliding_window or seq)
+    cache_structs = dict(
+        k=SDS((cfg.n_layers, batch, c, cfg.n_kv_heads, cfg.head_dim),
+              cfg.dtype),
+        v=SDS((cfg.n_layers, batch, c, cfg.n_kv_heads, cfg.head_dim),
+              cfg.dtype),
+        pos=SDS((batch, c), jnp.int32),
+        t=SDS((), jnp.int32))
+    cache_spec = dict(
+        k=P(None, *_batch_spec(mesh, batch, None, None, None)),
+        v=P(None, *_batch_spec(mesh, batch, None, None, None)),
+        pos=_batch_spec(mesh, batch, None), t=P())
+    tok_structs = SDS((batch,), jnp.int32)
+    meta = dict(kind="decode",
+                model_flops=2 * lm.active_params(cfg) * batch
+                + 2 * 2 * cfg.n_layers * batch * c * cfg.kv_dim,
+                layers=cfg.n_layers, tokens=batch, cache_len=c,
+                params=lm.count_params(cfg))
+    return Cell(entry.arch_id, shape.name, fn,
+                (pstructs, cache_structs, tok_structs),
+                (pshard, _ns(mesh, cache_spec),
+                 NamedSharding(mesh, _batch_spec(mesh, batch))),
+                (_ns(mesh, cache_spec), NamedSharding(
+                    mesh, _batch_spec(mesh, batch, None))), meta)
+
+
+# ===================================================================== #
+# GNN family
+# ===================================================================== #
+_GNN_MODS = {"pna": pna, "graphsage-reddit": sage, "nequip": nequip,
+             "equiformer-v2": equiformer_v2}
+_GEOMETRIC = {"nequip", "equiformer-v2"}
+
+
+def _pad_to(x: int, mult: int = 2048) -> int:
+    return -(-x // mult) * mult
+
+
+def _gnn_shape_dims(shape: ShapeCfg) -> dict:
+    """Static padded dims; padding uses sentinel edges / masked nodes."""
+    p = shape.params
+    if shape.kind == "full_graph":
+        n, e = _pad_to(p["n_nodes"]), _pad_to(2 * p["n_edges"])
+        return dict(n=n, e=e, d_feat=p["d_feat"],
+                    n_classes=47 if n > 10 ** 6 else 7,
+                    n_graphs=1, kind="node_class")
+    if shape.kind == "minibatch":
+        from ..graphs.sampler import subgraph_budget
+        n, e = subgraph_budget(p["batch_nodes"], p["fanout"])
+        return dict(n=_pad_to(n), e=_pad_to(e), d_feat=602, n_classes=41,
+                    n_graphs=1, kind="node_class")
+    # molecule
+    n = _pad_to(p["n_nodes"] * p["batch"])
+    e = _pad_to(2 * p["n_edges"] * p["batch"])
+    return dict(n=n, e=e, d_feat=16, n_classes=1, n_graphs=p["batch"],
+                kind="graph")
+
+
+def _gnn_cfg_for(entry, dims):
+    cfg = entry.config()
+    kw = dict(d_feat=dims["d_feat"])
+    if entry.arch_id in ("pna", "graphsage-reddit"):
+        kw["n_classes"] = dims["n_classes"]
+    else:
+        kw["out_kind"] = dims["kind"]
+        kw["n_classes"] = dims["n_classes"] if dims["kind"] != "graph" else 1
+    if entry.arch_id in ("pna", "graphsage-reddit"):
+        kw["out_kind"] = "graph" if dims["kind"] == "graph" else "node"
+        kw["n_classes"] = dims["n_classes"]
+    return dataclasses.replace(cfg, **kw)
+
+
+def build_gnn_cell(entry: ArchEntry, shape: ShapeCfg, mesh) -> Cell:
+    dims = _gnn_shape_dims(shape)
+    mod = _GNN_MODS[entry.arch_id]
+    cfg = _gnn_cfg_for(entry, dims)
+    n, e = dims["n"], dims["e"]
+    geometric = entry.arch_id in _GEOMETRIC
+    dp = _dp(mesh)
+
+    if dims["kind"] == "graph":
+        labels = SDS((dims["n_graphs"],), jnp.float32)
+        label_spec = P(None)
+    else:
+        labels = SDS((n,), jnp.int32)
+        label_spec = P(dp) if n % _dp_size(mesh) == 0 else P(None)
+
+    node_sp = P(dp) if n % _dp_size(mesh) == 0 else P(None)
+    edge_sp = P(dp) if e % _dp_size(mesh) == 0 else P(None)
+    batch_structs = GraphBatch(
+        n=n,
+        x=SDS((n, dims["d_feat"]), jnp.float32),
+        src=SDS((e,), jnp.int32), dst=SDS((e,), jnp.int32),
+        pos=SDS((n, 3), jnp.float32) if geometric else None,
+        node_mask=SDS((n,), jnp.bool_),
+        graph_ids=SDS((n,), jnp.int32) if dims["n_graphs"] > 1 else None,
+        n_graphs=dims["n_graphs"],
+        labels=labels,
+        seed_mask=SDS((n,), jnp.bool_) if shape.kind == "minibatch" else None)
+    batch_spec = GraphBatch(
+        n=n,
+        x=P(*node_sp, None), src=edge_sp, dst=edge_sp,
+        pos=P(*node_sp, None) if geometric else None,
+        node_mask=node_sp,
+        graph_ids=node_sp if dims["n_graphs"] > 1 else None,
+        n_graphs=dims["n_graphs"], labels=label_spec,
+        seed_mask=node_sp if shape.kind == "minibatch" else None)
+
+    pstructs = jax.eval_shape(lambda k: mod.init_params(cfg, k),
+                              jax.random.PRNGKey(0))
+    pspecs = jax.tree.map(lambda _: P(), pstructs)     # replicated params
+    opt = optim.adamw(optim.cosine_schedule(1e-3, 10_000, 100))
+    ostructs = jax.eval_shape(opt.init, pstructs)
+    ospecs = jax.tree.map(lambda _: P(), ostructs)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(mod.loss_fn)(params, batch, cfg)
+        params, opt_state = opt.apply(grads, opt_state, params)
+        return params, opt_state, loss
+
+    # analytic model flops (dominant message/feature matmuls, fwd+bwd ~3x)
+    model_flops = _gnn_model_flops(entry.arch_id, cfg, n, e)
+    meta = dict(kind="gnn_train", model_flops=model_flops, nodes=n, edges=e,
+                layers=cfg.n_layers)
+    return Cell(entry.arch_id, shape.name, train_step,
+                (pstructs, ostructs, batch_structs),
+                (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, batch_spec)),
+                (_ns(mesh, pspecs), _ns(mesh, ospecs), None), meta)
+
+
+def _gnn_model_flops(arch, cfg, n, e):
+    L = cfg.n_layers
+    if arch == "graphsage-reddit":
+        h = cfg.d_hidden
+        per = 2 * n * (cfg.d_feat * h + h * h)
+        return 3 * L * (per + e * h)
+    if arch == "pna":
+        h = cfg.d_hidden
+        return 3 * L * (2 * n * (13 * h) * h + 4 * e * h)
+    if arch == "nequip":
+        C = cfg.d_hidden
+        n_paths = len(nequip.paths_for(cfg.l_max))
+        per_edge = n_paths * (2 * cfg.l_max + 1) ** 2 * C * 2
+        return 3 * L * e * per_edge
+    # equiformer-v2
+    C = cfg.d_hidden
+    lm_, mm = cfg.l_max, cfg.m_max
+    n0 = lm_ + 1
+    so2 = 2 * ((n0 * C) ** 2 + 2 * sum(
+        ((lm_ - m + 1) * C) ** 2 * 2 for m in range(1, mm + 1)))
+    wigner = sum(2 * (2 * l + 1) ** 2 * C for l in range(lm_ + 1))
+    return 3 * cfg.n_layers * e * (so2 + 2 * wigner)
+
+
+# ===================================================================== #
+# RecSys family
+# ===================================================================== #
+def build_recsys_cell(entry: ArchEntry, shape: ShapeCfg, mesh) -> Cell:
+    cfg = entry.config()
+    p = shape.params
+    dp = _dp(mesh)
+    pstructs = jax.eval_shape(lambda k: mind.init_params(cfg, k),
+                              jax.random.PRNGKey(0))
+    pspecs = mind.param_specs(cfg, mesh)
+    pshard = _ns(mesh, pspecs)
+    d = cfg.embed_dim
+
+    if shape.kind == "train":
+        b = p["batch"]
+        opt = optim.adamw(optim.cosine_schedule(1e-3, 10_000, 100))
+        ostructs = jax.eval_shape(opt.init, pstructs)
+        ospecs = dict(step=P(), m=pspecs, v=pspecs, master=pspecs)
+        bstructs = dict(
+            hist_ids=SDS((b, cfg.hist_len), jnp.int32),
+            hist_mask=SDS((b, cfg.hist_len), jnp.bool_),
+            profile_ids=SDS((b * cfg.profile_tags,), jnp.int32),
+            profile_bags=SDS((b * cfg.profile_tags,), jnp.int32),
+            pos_ids=SDS((b,), jnp.int32),
+            neg_ids=SDS((b, cfg.n_neg), jnp.int32))
+        bspec = dict(hist_ids=_batch_spec(mesh, b, None),
+                     hist_mask=_batch_spec(mesh, b, None),
+                     profile_ids=_batch_spec(mesh, b * cfg.profile_tags),
+                     profile_bags=_batch_spec(mesh, b * cfg.profile_tags),
+                     pos_ids=_batch_spec(mesh, b),
+                     neg_ids=_batch_spec(mesh, b, None))
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(mind.train_loss)(
+                params, batch, cfg, mesh)
+            params, opt_state = opt.apply(grads, opt_state, params)
+            return params, opt_state, loss
+
+        lookups = b * (cfg.hist_len + 1 + cfg.n_neg + cfg.profile_tags)
+        flops = 3 * (b * (2 * cfg.hist_len * d * d * (cfg.capsule_iters + 1)
+                          + cfg.n_neg * d) + lookups * d)
+        meta = dict(kind="train", model_flops=flops, lookups=lookups,
+                    batch=b)
+        return Cell(entry.arch_id, shape.name, train_step,
+                    (pstructs, ostructs, bstructs),
+                    (pshard, _ns(mesh, ospecs), _ns(mesh, bspec)),
+                    (pshard, _ns(mesh, ospecs), None), meta)
+
+    if shape.kind == "serve":
+        b = p["batch"]
+        bstructs = (SDS((b, cfg.hist_len), jnp.int32),
+                    SDS((b, cfg.hist_len), jnp.bool_),
+                    SDS((b * cfg.profile_tags,), jnp.int32),
+                    SDS((b * cfg.profile_tags,), jnp.int32))
+        bspec = (_batch_spec(mesh, b, None), _batch_spec(mesh, b, None),
+                 _batch_spec(mesh, b * cfg.profile_tags),
+                 _batch_spec(mesh, b * cfg.profile_tags))
+
+        def serve(params, hist, mask, pids, pbags):
+            return mind.user_interests(params, hist, mask, pids, pbags,
+                                       cfg, mesh)
+
+        flops = b * 2 * cfg.hist_len * d * d * (cfg.capsule_iters + 1)
+        meta = dict(kind="serve", model_flops=flops, batch=b)
+        return Cell(entry.arch_id, shape.name, serve,
+                    (pstructs, *bstructs),
+                    (pshard, *(NamedSharding(mesh, s) for s in bspec)),
+                    NamedSharding(mesh, _batch_spec(mesh, b, None, None)),
+                    meta)
+
+    # retrieval: 1 user × n_candidates
+    nc = p["n_candidates"]
+    inter = SDS((cfg.n_interests, d), jnp.float32)
+    cands = SDS((nc,), jnp.int32)
+
+    def retrieve(params, interests, cand_ids):
+        return mind.retrieval_scores(params, interests, cand_ids, cfg, mesh)
+
+    meta = dict(kind="retrieval",
+                model_flops=2 * nc * d * cfg.n_interests, candidates=nc)
+    return Cell(entry.arch_id, shape.name, retrieve,
+                (pstructs, inter, cands),
+                (pshard, NamedSharding(mesh, P(None, None)),
+                 NamedSharding(mesh, P(None))),
+                NamedSharding(mesh, P(None)), meta)
+
+
+# ===================================================================== #
+# psi family (the paper itself)
+# ===================================================================== #
+def build_psi_cell(entry: ArchEntry, shape: ShapeCfg, mesh,
+                   *, probe_iters: int | None = None) -> Cell:
+    from ..core.distributed import DistributedPsi
+    from ..graphs.partition import Partition2D
+    cfg = entry.config()
+    name = shape.params["dataset"]
+    n, m = _psi_graph_dims(name)
+    axes = mesh.axis_names
+    d = int(np.prod([mesh.shape[a] for a in axes[:-1]]))
+    mo = mesh.shape["model"]
+    q = -(-n // (d * mo))
+    e_max = int(np.ceil(m / (d * mo) * 2.0 / 128)) * 128 + 128
+    placeholder = np.broadcast_to(np.zeros((1,), np.int32),
+                                  (d, mo, e_max))      # no allocation
+    part = Partition2D(
+        n=n, n_pad=d * mo * q, d=d, mo=mo, q=q,
+        src_local=placeholder, dst_local=placeholder,
+        e_counts=np.zeros((d, mo), np.int64))
+    dist = DistributedPsi(part, mesh)
+    run = dist.make_run(chunk_iters=probe_iters or cfg.chunk_iters,
+                        unroll=probe_iters is not None)
+
+    sd = jax.ShapeDtypeStruct
+    specs = dict(
+        src_local=sd((d, mo, e_max), jnp.int32),
+        dst_local=sd((d, mo, e_max), jnp.int32),
+        inv_w_src=sd((d, mo * q), jnp.float32),
+        mu_piece=sd((d, mo, q), jnp.float32),
+        c_piece=sd((d, mo, q), jnp.float32),
+        c_src=sd((d, mo * q), jnp.float32),
+        lam_piece=sd((d, mo, q), jnp.float32),
+        d_piece=sd((d, mo, q), jnp.float32))
+    from ..core.distributed import DistPsiArrays
+    arr_structs = DistPsiArrays(**specs)
+    shardings = dist.shardings()
+    arr_shard = DistPsiArrays(**shardings)
+    s_struct = sd((d, mo * q), jnp.float32)
+    s_shard = shardings["c_src"]
+
+    def fn(s, arrays):
+        return run(s, arrays)
+
+    iters = probe_iters or cfg.chunk_iters
+    meta = dict(kind="psi_iterate", nodes=n, edges=m, iters=iters,
+                model_flops=iters * 3 * m)     # gather·mul + scatter-add per edge
+    return Cell(entry.arch_id, shape.name, fn, (s_struct, arr_structs),
+                (s_shard, arr_shard), (s_shard, None), meta)
+
+
+def _psi_graph_dims(name: str) -> tuple[int, int]:
+    from ..graphs.datasets import DATASETS
+    if name.startswith("rmat"):
+        scale = int(name.removeprefix("rmat"))
+        return (1 << scale), (1 << scale) * 16
+    n, m, *_ = DATASETS[name]
+    return n, m
+
+
+# ===================================================================== #
+# Dispatcher
+# ===================================================================== #
+def build_cell(entry: ArchEntry, shape: ShapeCfg, mesh) -> Cell:
+    if entry.family == "lm":
+        cell = build_lm_cell(entry, shape, mesh)
+        cell.probes = [build_lm_cell(entry, shape, mesh, probe_layers=1),
+                       build_lm_cell(entry, shape, mesh, probe_layers=2)]
+        return cell
+    if entry.family == "gnn":
+        return build_gnn_cell(entry, shape, mesh)
+    if entry.family == "recsys":
+        return build_recsys_cell(entry, shape, mesh)
+    if entry.family == "psi":
+        cell = build_psi_cell(entry, shape, mesh)
+        cell.probes = [build_psi_cell(entry, shape, mesh, probe_iters=1),
+                       build_psi_cell(entry, shape, mesh, probe_iters=2)]
+        return cell
+    raise ValueError(entry.family)

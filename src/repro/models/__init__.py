@@ -1,0 +1,1 @@
+"""Model zoo: transformer LM family, GNN family, recsys family."""

@@ -1,0 +1,4 @@
+"""GNN family: PNA, GraphSAGE, NequIP, EquiformerV2 (+ SO(3) machinery)."""
+from .common import (GraphBatch, segment_agg, segment_softmax, graph_pool,
+                     batch_from_graph, pad_graph_batch)
+from . import so3, sage, pna, nequip, equiformer_v2

@@ -1,0 +1,167 @@
+"""Shared GNN substrate: graph batches, segment aggregation, MLPs.
+
+Message passing is built on ``jax.ops.segment_*`` over an edge-index →
+node scatter (JAX has no CSR/CSC sparse — this IS part of the system, per
+the assignment). Edges are dst-sorted with sentinel padding (src = dst = n;
+the sentinel row is dropped by aggregating into n+1 segments).
+
+The same edge layout feeds the Pallas ``seg_mm`` kernel (kernels/seg_mm.py)
+— the GNN aggregation and the ψ-score push share one kernel regime
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["GraphBatch", "segment_agg", "segment_softmax", "graph_pool",
+           "mlp_init", "mlp_apply", "dense_init", "batch_from_graph",
+           "pad_graph_batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """One (possibly batched/padded) graph. n = #node slots (incl. pad)."""
+    n: int                      # static node count (padded)
+    x: jax.Array                # f[n, d_feat] node features (pad rows zero)
+    src: jax.Array              # i32[e] sender; sentinel = n
+    dst: jax.Array              # i32[e] receiver (sorted); sentinel = n
+    pos: jax.Array | None = None        # f[n, 3] positions (geometric nets)
+    node_mask: jax.Array | None = None  # bool[n] valid nodes
+    graph_ids: jax.Array | None = None  # i32[n] for batched-graph pooling
+    n_graphs: int = 1
+    labels: jax.Array | None = None     # i32[n] or f[n_graphs, ...]
+    seed_mask: jax.Array | None = None  # bool[n] readout nodes (minibatch)
+
+
+jax.tree_util.register_dataclass(
+    GraphBatch,
+    data_fields=["x", "src", "dst", "pos", "node_mask", "graph_ids",
+                 "labels", "seed_mask"],
+    meta_fields=["n", "n_graphs"])
+
+
+def segment_agg(values: jax.Array, dst: jax.Array, n: int, kind: str,
+                *, indices_are_sorted: bool = True) -> jax.Array:
+    """Aggregate edge rows onto nodes. kind ∈ {sum, mean, max, min, std}."""
+    kw = dict(num_segments=n + 1, indices_are_sorted=indices_are_sorted)
+    if kind == "sum":
+        return jax.ops.segment_sum(values, dst, **kw)[:n]
+    if kind == "mean":
+        s = jax.ops.segment_sum(values, dst, **kw)[:n]
+        cnt = jax.ops.segment_sum(jnp.ones_like(dst, values.dtype), dst,
+                                  **kw)[:n]
+        return s / jnp.maximum(cnt[..., None] if values.ndim > 1 else cnt, 1)
+    if kind == "max":
+        m = jax.ops.segment_max(values, dst, **kw)[:n]
+        return jnp.where(jnp.isfinite(m), m, 0.0)
+    if kind == "min":
+        m = jax.ops.segment_min(values, dst, **kw)[:n]
+        return jnp.where(jnp.isfinite(m), m, 0.0)
+    if kind == "std":
+        mean = segment_agg(values, dst, n, "mean")
+        sq = segment_agg(values * values, dst, n, "mean")
+        return jnp.sqrt(jnp.maximum(sq - mean * mean, 1e-8))
+    raise ValueError(kind)
+
+
+def segment_softmax(logits: jax.Array, dst: jax.Array, n: int) -> jax.Array:
+    """Edge-wise softmax normalized per destination node."""
+    kw = dict(num_segments=n + 1, indices_are_sorted=True)
+    mx = jax.ops.segment_max(logits, dst, **kw)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    e = jnp.exp(logits - mx[dst])
+    z = jax.ops.segment_sum(e, dst, **kw)
+    return e / jnp.maximum(z[dst], 1e-20)
+
+
+def graph_pool(values: jax.Array, batch: GraphBatch, kind: str = "sum"
+               ) -> jax.Array:
+    """Pool node values per graph (molecule shape)."""
+    gid = (batch.graph_ids if batch.graph_ids is not None
+           else jnp.zeros((batch.n,), jnp.int32))
+    if batch.node_mask is not None:
+        values = values * batch.node_mask[:, None].astype(values.dtype)
+    out = jax.ops.segment_sum(values, gid, num_segments=batch.n_graphs)
+    if kind == "mean":
+        cnt = jax.ops.segment_sum(
+            (batch.node_mask.astype(values.dtype)
+             if batch.node_mask is not None
+             else jnp.ones((batch.n,), values.dtype)),
+            gid, num_segments=batch.n_graphs)
+        out = out / jnp.maximum(cnt[:, None], 1)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# Tiny functional-MLP helpers
+# --------------------------------------------------------------------- #
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(d_in)
+    return dict(w=jax.random.normal(key, (d_in, d_out), dtype) * scale,
+                b=jnp.zeros((d_out,), dtype))
+
+
+def mlp_init(key, dims: list[int], dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [dense_init(k, a, b, dtype) for k, a, b in
+            zip(keys, dims[:-1], dims[1:])]
+
+
+def mlp_apply(layers, x, act=jax.nn.silu, final_act=False):
+    for i, lyr in enumerate(layers):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# --------------------------------------------------------------------- #
+# Batch builders
+# --------------------------------------------------------------------- #
+def batch_from_graph(graph, x: np.ndarray, *, labels=None, pos=None,
+                     bidirectional: bool = True) -> GraphBatch:
+    """Host Graph → device GraphBatch (dst-sorted, sentinel-padded)."""
+    src, dst = graph.src, graph.dst
+    if bidirectional:
+        src, dst = (np.concatenate([src, graph.dst]),
+                    np.concatenate([dst, graph.src]))
+    order = np.argsort(dst, kind="stable")
+    src, dst = src[order], dst[order]
+    return GraphBatch(
+        n=graph.n, x=jnp.asarray(x),
+        src=jnp.asarray(src, jnp.int32), dst=jnp.asarray(dst, jnp.int32),
+        pos=None if pos is None else jnp.asarray(pos),
+        labels=None if labels is None else jnp.asarray(labels),
+        node_mask=jnp.ones((graph.n,), bool))
+
+
+def pad_graph_batch(b: GraphBatch, n_pad: int, e_pad: int) -> GraphBatch:
+    """Pad to static (n_pad, e_pad) with sentinel edges and zero rows."""
+    dn = n_pad - b.n
+    de = e_pad - b.src.shape[0]
+    pad_row = lambda a: (None if a is None else
+                         jnp.concatenate([a, jnp.zeros((dn,) + a.shape[1:],
+                                                       a.dtype)]))
+    return GraphBatch(
+        n=n_pad,
+        x=pad_row(b.x),
+        src=jnp.concatenate([b.src, jnp.full((de,), n_pad, jnp.int32)]),
+        dst=jnp.concatenate([b.dst, jnp.full((de,), n_pad, jnp.int32)]),
+        pos=pad_row(b.pos),
+        node_mask=(jnp.concatenate([b.node_mask, jnp.zeros((dn,), bool)])
+                   if b.node_mask is not None else
+                   jnp.concatenate([jnp.ones((b.n,), bool),
+                                    jnp.zeros((dn,), bool)])),
+        graph_ids=(None if b.graph_ids is None else
+                   jnp.concatenate([b.graph_ids,
+                                    jnp.zeros((dn,), jnp.int32)])),
+        n_graphs=b.n_graphs,
+        labels=b.labels,
+        seed_mask=(None if b.seed_mask is None else
+                   jnp.concatenate([b.seed_mask, jnp.zeros((dn,), bool)])))

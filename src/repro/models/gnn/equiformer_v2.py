@@ -1,0 +1,237 @@
+"""EquiformerV2 — equivariant graph attention via eSCN convolutions
+[arXiv:2306.12059].
+
+The eSCN insight implemented TPU-natively (DESIGN.md §3): rotating each edge's
+irrep features into the edge frame makes the tensor-product convolution
+block-diagonal in m, reducing the O(L⁶) CG contraction to O(L³) dense
+matmuls — exactly the MXU regime. Per block:
+
+  1. equivariant RMS norm (per-l, learned per-channel scale),
+  2. rotate src/dst features to the edge frame with real Wigner matrices
+     (``so3.wigner_real``), truncated to |m| ≤ m_max (columns sliced from D,
+     so the truncation costs nothing),
+  3. SO(2) convolution: one dense matmul per m (complex-structured W_r/W_i
+     pairs for m > 0), modulated by a radial MLP,
+  4. multi-head attention: logits from the m=0 (scalar) channels of src ⊕
+     dst → segment-softmax over incoming edges,
+  5. rotate messages back, scatter-sum onto destinations, per-l output
+     linear, residual; then a gated equivariant FFN.
+
+Wigner matrices are computed once per forward and shared across layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import so3
+from .common import GraphBatch, dense_init, graph_pool, mlp_apply, mlp_init
+from .nequip import _bessel
+
+__all__ = ["EquiformerV2Config", "init_params", "apply", "loss_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerV2Config:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    d_hidden: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_feat: int = 16
+    out_kind: str = "graph"        # graph | node | node_class
+    n_classes: int = 1
+    dtype: object = jnp.float32
+
+
+def _m_layout(l_max: int, m_max: int):
+    """Truncated per-l kept-m columns and per-m row groups."""
+    kept_cols = []      # per l: indices of kept m within [0, 2l+1)
+    trunc_lm = []       # (l, m) in truncated row order
+    for l in range(l_max + 1):
+        cols = [l + m for m in range(-min(l, m_max), min(l, m_max) + 1)]
+        kept_cols.append(np.asarray(cols, np.int32))
+        trunc_lm += [(l, m) for m in range(-min(l, m_max), min(l, m_max) + 1)]
+    groups = {}
+    for m in range(-m_max, m_max + 1):
+        groups[m] = np.asarray(
+            [i for i, (l, mm) in enumerate(trunc_lm) if mm == m], np.int32)
+    km = len(trunc_lm)
+    return kept_cols, groups, km
+
+
+def init_params(cfg: EquiformerV2Config, key: jax.Array) -> dict:
+    C, L, M = cfg.d_hidden, cfg.l_max, cfg.m_max
+    _, groups, km = _m_layout(L, M)
+    n0 = groups[0].shape[0]                       # #l's at m=0 (= L+1)
+    keys = iter(jax.random.split(
+        key, 8 + cfg.n_layers * (2 * (L + 1) + 2 * M + 6)))
+    embed = dense_init(next(keys), cfg.d_feat, C, cfg.dtype)
+    layers = []
+    for _ in range(cfg.n_layers):
+        lp = dict(
+            norm_scale=jnp.ones((L + 1, C), cfg.dtype),
+            w0=dense_init(next(keys), n0 * C, n0 * C, cfg.dtype),
+            alpha=mlp_init(next(keys), [2 * n0 * C, 64, cfg.n_heads],
+                           cfg.dtype),
+            radial=mlp_init(next(keys), [cfg.n_rbf, 32, (M + 1) * C],
+                            cfg.dtype),
+            out={f"l{l}": dense_init(next(keys), C, C, cfg.dtype)
+                 for l in range(L + 1)},
+            ffn_gate=dense_init(next(keys), C, L * C, cfg.dtype),
+            ffn={f"l{l}": dense_init(next(keys), C, C, cfg.dtype)
+                 for l in range(L + 1)},
+        )
+        for m in range(1, M + 1):
+            nm = groups[m].shape[0]
+            lp[f"w{m}r"] = dense_init(next(keys), nm * C, nm * C, cfg.dtype)
+            lp[f"w{m}i"] = dense_init(next(keys), nm * C, nm * C, cfg.dtype)
+        layers.append(lp)
+    head = mlp_init(next(keys), [C, 64, cfg.n_classes], cfg.dtype)
+    return dict(embed=embed, layers=layers, head=head)
+
+
+def _so2_conv(xt, lp, groups, C, m_max, radial):
+    """xt: [E, Km, C] edge-frame features → same shape. radial: [E, M+1, C]."""
+    e = xt.shape[0]
+    out = jnp.zeros_like(xt)
+    g0 = groups[0]
+    n0 = g0.shape[0]
+    y0 = (xt[:, g0].reshape(e, n0 * C) @ lp["w0"]["w"] + lp["w0"]["b"])
+    out = out.at[:, g0].set(
+        y0.reshape(e, n0, C) * radial[:, 0][:, None, :])
+    for m in range(1, m_max + 1):
+        gp, gn = groups[m], groups[-m]
+        nm = gp.shape[0]
+        a = xt[:, gp].reshape(e, nm * C)
+        b = xt[:, gn].reshape(e, nm * C)
+        wr, wi = lp[f"w{m}r"]["w"], lp[f"w{m}i"]["w"]
+        yp = (a @ wr - b @ wi).reshape(e, nm, C)
+        yn = (a @ wi + b @ wr).reshape(e, nm, C)
+        scale = radial[:, m][:, None, :]
+        out = out.at[:, gp].set(yp * scale)
+        out = out.at[:, gn].set(yn * scale)
+    return out
+
+
+def apply(params, batch: GraphBatch, cfg: EquiformerV2Config) -> jax.Array:
+    n, C, L, M, H = (batch.n, cfg.d_hidden, cfg.l_max, cfg.m_max,
+                     cfg.n_heads)
+    kept_cols, groups, km = _m_layout(L, M)
+    groups = {m: jnp.asarray(g) for m, g in groups.items()}
+    offs = so3.l_offsets(L)
+
+    pos = batch.pos.astype(cfg.dtype)
+    pos_p = jnp.concatenate([pos, jnp.zeros((1, 3), cfg.dtype)], 0)
+    rvec = pos_p[batch.src] - pos_p[batch.dst]
+    dist = jnp.linalg.norm(rvec + 1e-12, axis=-1)
+    rhat = rvec / jnp.maximum(dist[:, None], 1e-9)
+    rbf = _bessel(dist, cfg.n_rbf, cfg.cutoff)
+
+    # Wigner matrices per l, truncated columns — once per forward
+    alpha_ang, cb = so3.rotation_angles(rhat)
+    dws = []
+    for l in range(L + 1):
+        d = so3.wigner_real(l, alpha_ang, cb)          # [E, 2l+1, 2l+1]
+        dws.append(d[:, :, jnp.asarray(kept_cols[l])])  # [E, 2l+1, kl]
+
+    # features: flat irreps [N, (L+1)^2, C]
+    x = jnp.zeros((n, (L + 1) ** 2, C), cfg.dtype)
+    x = x.at[:, 0].set(batch.x.astype(cfg.dtype) @ params["embed"]["w"]
+                       + params["embed"]["b"])
+
+    for lp in params["layers"]:
+        # --- equivariant norm --------------------------------------- #
+        xs = []
+        for l in range(L + 1):
+            blk = x[:, offs[l]:offs[l] + 2 * l + 1]
+            rms = jnp.sqrt(jnp.mean(jnp.square(blk), axis=(1, 2),
+                                    keepdims=True) + 1e-6)
+            xs.append(blk / rms * lp["norm_scale"][l][None, None, :])
+        xn = jnp.concatenate(xs, axis=1)
+        xn_p = jnp.concatenate([xn, jnp.zeros((1, (L + 1) ** 2, C),
+                                              cfg.dtype)], 0)
+
+        # --- rotate into edge frames (truncated) ---------------------- #
+        def to_frame(feats):
+            parts = []
+            for l in range(L + 1):
+                blk = feats[:, offs[l]:offs[l] + 2 * l + 1]
+                parts.append(jnp.einsum("eak,eac->ekc", dws[l], blk))
+            return jnp.concatenate(parts, axis=1)      # [E, Km, C]
+
+        xs_src = to_frame(xn_p[batch.src])
+        xs_dst = to_frame(xn_p[batch.dst])
+
+        # --- attention logits from scalar (m=0) channels -------------- #
+        g0 = groups[0]
+        feat = jnp.concatenate(
+            [xs_src[:, g0].reshape(-1, (L + 1) * C),
+             xs_dst[:, g0].reshape(-1, (L + 1) * C)], axis=-1)
+        logits = mlp_apply(lp["alpha"], feat)           # [E, H]
+        from .common import segment_softmax
+        att = segment_softmax(logits, batch.dst, n)     # [E, H]
+
+        # --- SO(2) conv value + heads --------------------------------- #
+        radial = mlp_apply(lp["radial"], rbf).reshape(-1, M + 1, C)
+        val = _so2_conv(xs_src, lp, groups, C, M, radial)  # [E, Km, C]
+        val = val.reshape(val.shape[0], km, H, C // H)
+        msg = (val * att[:, None, :, None]).reshape(-1, km, C)
+
+        # --- rotate back + aggregate ---------------------------------- #
+        agg = jnp.zeros((n + 1, (L + 1) ** 2, C), cfg.dtype)
+        col = 0
+        for l in range(L + 1):
+            kl = kept_cols[l].shape[0]
+            blk = jnp.einsum("eak,ekc->eac", dws[l], msg[:, col:col + kl])
+            agg = agg.at[batch.dst, offs[l]:offs[l] + 2 * l + 1].add(blk)
+            col += kl
+        agg = agg[:n]
+
+        # per-l output linear + residual
+        upd = []
+        for l in range(L + 1):
+            blk = agg[:, offs[l]:offs[l] + 2 * l + 1]
+            upd.append(jnp.einsum("nmc,cd->nmd", blk, lp["out"][f"l{l}"]["w"]))
+        x = x + jnp.concatenate(upd, axis=1)
+
+        # --- gated equivariant FFN ------------------------------------ #
+        scal = x[:, 0]
+        gates = jax.nn.sigmoid(scal @ lp["ffn_gate"]["w"]
+                               + lp["ffn_gate"]["b"]).reshape(n, L, C)
+        f = []
+        for l in range(L + 1):
+            blk = x[:, offs[l]:offs[l] + 2 * l + 1]
+            h = jnp.einsum("nmc,cd->nmd", blk, lp["ffn"][f"l{l}"]["w"])
+            if l == 0:
+                h = jax.nn.silu(h + lp["ffn"][f"l{l}"]["b"][None, None, :])
+            else:
+                h = h * gates[:, l - 1][:, None, :]
+            f.append(h)
+        x = x + jnp.concatenate(f, axis=1)
+
+    return mlp_apply(params["head"], x[:, 0])
+
+
+def loss_fn(params, batch: GraphBatch, cfg: EquiformerV2Config) -> jax.Array:
+    out = apply(params, batch, cfg)
+    if cfg.out_kind == "graph":
+        pooled = graph_pool(out, batch, "sum")[:, 0]
+        return jnp.mean(jnp.square(pooled - batch.labels))
+    if cfg.out_kind == "node_class":
+        logz = jax.scipy.special.logsumexp(out, axis=-1)
+        gold = jnp.take_along_axis(
+            out, jnp.clip(batch.labels, 0)[:, None], axis=-1)[:, 0]
+        mask = (batch.node_mask if batch.node_mask is not None else
+                jnp.ones((batch.n,), bool)).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    mask = (batch.node_mask if batch.node_mask is not None else
+            jnp.ones((batch.n,), bool)).astype(jnp.float32)
+    return jnp.sum(jnp.square(out[:, 0] - batch.labels) * mask) / \
+        jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,151 @@
+"""NequIP — E(3)-equivariant interatomic potentials [arXiv:2101.03164].
+
+Features are direct sums of real irreps {l: [N, 2l+1, C]} (l ≤ l_max = 2,
+uniform multiplicity C = d_hidden). One interaction block:
+
+  message  m_e^{l3} = Σ_{paths (l1,l2)} R_path(|r_e|) · CG^{l1 l2 l3}
+                       · (x_src^{l1} ⊗ Y^{l2}(r̂_e))
+  update   x^{l} ← SelfLinear_l( x^l + Σ_{e→v} m_e^l ),  gate nonlinearity
+           (scalars: SiLU; l>0: sigmoid(scalar gates) scaling)
+
+Radial R: Bessel basis (n_rbf) with polynomial cutoff envelope → MLP →
+per-(path, channel) weights. Output: per-node scalar (energy) readout, or
+graph-pooled regression for the ``molecule`` shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import so3
+from .common import GraphBatch, dense_init, mlp_apply, mlp_init, graph_pool
+
+__all__ = ["NequIPConfig", "init_params", "apply", "loss_fn", "paths_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    d_hidden: int = 32
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_feat: int = 16              # input scalar features (species embed)
+    out_kind: str = "graph"       # graph | node | node_class
+    n_classes: int = 1
+    dtype: object = jnp.float32
+
+
+def paths_for(l_max: int) -> list[tuple[int, int, int]]:
+    """All (l_in, l_filter, l_out) with every l ≤ l_max and CG-compatible."""
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(abs(l1 - l2), min(l_max, l1 + l2) + 1):
+                out.append((l1, l2, l3))
+    return out
+
+
+def _bessel(r, n_rbf, cutoff):
+    """Bessel RBF with smooth polynomial envelope (DimeNet-style)."""
+    rc = cutoff
+    x = jnp.clip(r / rc, 1e-5, 1.0)
+    n = jnp.arange(1, n_rbf + 1, dtype=r.dtype)
+    rbf = jnp.sqrt(2.0 / rc) * jnp.sin(n * jnp.pi * x[..., None]) / (
+        x[..., None] * rc)
+    p = 6.0
+    env = (1 - (p + 1) * (p + 2) / 2 * x ** p + p * (p + 2) * x ** (p + 1)
+           - p * (p + 1) / 2 * x ** (p + 2))
+    return rbf * env[..., None]
+
+
+def init_params(cfg: NequIPConfig, key: jax.Array) -> dict:
+    C = cfg.d_hidden
+    paths = paths_for(cfg.l_max)
+    keys = iter(jax.random.split(
+        key, 6 + cfg.n_layers * (cfg.l_max + 4)))
+    embed = dense_init(next(keys), cfg.d_feat, C, cfg.dtype)
+    layers = []
+    for _ in range(cfg.n_layers):
+        radial = mlp_init(next(keys), [cfg.n_rbf, 32, len(paths) * C],
+                          cfg.dtype)
+        self_lin = {f"l{l}": dense_init(next(keys), C, C, cfg.dtype)
+                    for l in range(cfg.l_max + 1)}
+        gates = dense_init(next(keys), C, cfg.l_max * C, cfg.dtype)
+        layers.append(dict(radial=radial, self_lin=self_lin, gates=gates))
+    head = mlp_init(next(keys), [C, 32, cfg.n_classes], cfg.dtype)
+    return dict(embed=embed, layers=layers, head=head)
+
+
+def apply(params, batch: GraphBatch, cfg: NequIPConfig) -> jax.Array:
+    """→ per-node output [n, n_classes] (pool for graph tasks in loss)."""
+    n, C = batch.n, cfg.d_hidden
+    paths = paths_for(cfg.l_max)
+    pos = batch.pos.astype(cfg.dtype)
+    # pad a sentinel row so src/dst == n is safe
+    pos_p = jnp.concatenate([pos, jnp.zeros((1, 3), cfg.dtype)], 0)
+    rvec = pos_p[batch.src] - pos_p[batch.dst]
+    dist = jnp.linalg.norm(rvec + 1e-12, axis=-1)
+    rhat = rvec / jnp.maximum(dist[:, None], 1e-9)
+    ys = so3.sph_harm_all(cfg.l_max, rhat)          # per l: [E, 2l+1]
+    rbf = _bessel(dist, cfg.n_rbf, cfg.cutoff)      # [E, n_rbf]
+
+    # features: x[l] : [n, 2l+1, C]
+    x = {0: (batch.x.astype(cfg.dtype) @ params["embed"]["w"]
+             + params["embed"]["b"])[:, None, :]}
+    for l in range(1, cfg.l_max + 1):
+        x[l] = jnp.zeros((n, 2 * l + 1, C), cfg.dtype)
+
+    cg = {p: jnp.asarray(so3.real_cg(*p), cfg.dtype) for p in paths}
+
+    for lyr in params["layers"]:
+        w = mlp_apply(lyr["radial"], rbf).reshape(-1, len(paths), C)  # [E,P,C]
+        agg = {l: jnp.zeros((n + 1, 2 * l + 1, C), cfg.dtype)
+               for l in range(cfg.l_max + 1)}
+        xp = {l: jnp.concatenate(
+            [x[l], jnp.zeros((1, 2 * l + 1, C), cfg.dtype)], 0)
+            for l in x}
+        for pi, (l1, l2, l3) in enumerate(paths):
+            xs = xp[l1][batch.src]                   # [E, 2l1+1, C]
+            msg = jnp.einsum("pqr,epc,eq->erc", cg[(l1, l2, l3)], xs, ys[l2])
+            msg = msg * w[:, pi][:, None, :]
+            agg[l3] = agg[l3].at[batch.dst].add(msg)
+        gates = jax.nn.sigmoid(
+            x[0][:, 0, :] @ lyr["gates"]["w"] + lyr["gates"]["b"]
+        ).reshape(n, cfg.l_max, C)
+        new_x = {}
+        for l in range(cfg.l_max + 1):
+            h = x[l] + agg[l][:n]
+            h = jnp.einsum("nmc,cd->nmd", h, lyr["self_lin"][f"l{l}"]["w"]) \
+                + (lyr["self_lin"][f"l{l}"]["b"] if l == 0 else 0.0)
+            if l == 0:
+                h = jax.nn.silu(h)
+            else:
+                h = h * gates[:, l - 1][:, None, :]
+            new_x[l] = h
+        x = new_x
+
+    return mlp_apply(params["head"], x[0][:, 0, :])
+
+
+def loss_fn(params, batch: GraphBatch, cfg: NequIPConfig) -> jax.Array:
+    out = apply(params, batch, cfg)
+    if cfg.out_kind == "graph":
+        pooled = graph_pool(out, batch, "sum")[:, 0]
+        return jnp.mean(jnp.square(pooled - batch.labels))
+    if cfg.out_kind == "node_class":
+        logz = jax.scipy.special.logsumexp(out, axis=-1)
+        gold = jnp.take_along_axis(
+            out, jnp.clip(batch.labels, 0)[:, None], axis=-1)[:, 0]
+        mask = (batch.node_mask if batch.node_mask is not None else
+                jnp.ones((batch.n,), bool)).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    mask = (batch.node_mask if batch.node_mask is not None else
+            jnp.ones((batch.n,), bool)).astype(jnp.float32)
+    return jnp.sum(jnp.square(out[:, 0] - batch.labels) * mask) / \
+        jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,80 @@
+"""GraphSAGE [arXiv:1706.02216] — mean aggregator, fanout-sampled training.
+
+h_v^{k+1} = σ( W_self h_v ⊕ W_neigh · mean_{u∈N(v)} h_u )   (concat variant)
+
+Node classification head; the ``minibatch_lg`` shape consumes subgraphs from
+``graphs.sampler.fanout_sample`` and reads out seed nodes only.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import GraphBatch, dense_init, mlp_apply, segment_agg
+
+__all__ = ["SageConfig", "init_params", "apply", "loss_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SageConfig:
+    name: str = "graphsage-reddit"
+    n_layers: int = 2
+    d_hidden: int = 128
+    aggregator: str = "mean"
+    sample_sizes: tuple[int, ...] = (25, 10)
+    d_feat: int = 602
+    n_classes: int = 41
+    out_kind: str = "node"        # node | graph (molecule shape)
+    dtype: object = jnp.float32
+
+
+def init_params(cfg: SageConfig, key: jax.Array) -> dict:
+    keys = jax.random.split(key, 2 * cfg.n_layers + 1)
+    layers = []
+    d_in = cfg.d_feat
+    for i in range(cfg.n_layers):
+        layers.append(dict(
+            w_self=dense_init(keys[2 * i], d_in, cfg.d_hidden, cfg.dtype),
+            w_neigh=dense_init(keys[2 * i + 1], d_in, cfg.d_hidden,
+                               cfg.dtype)))
+        d_in = cfg.d_hidden
+    head = dense_init(keys[-1], cfg.d_hidden, cfg.n_classes, cfg.dtype)
+    return dict(layers=layers, head=head)
+
+
+def apply(params, batch: GraphBatch, cfg: SageConfig) -> jax.Array:
+    """→ logits f[n, n_classes]."""
+    h = batch.x.astype(cfg.dtype)
+
+    def layer(h, lyr):
+        msgs = h[batch.src]
+        agg = segment_agg(msgs, batch.dst, batch.n, cfg.aggregator)
+        h = jax.nn.relu(
+            h @ lyr["w_self"]["w"] + lyr["w_self"]["b"] +
+            agg @ lyr["w_neigh"]["w"] + lyr["w_neigh"]["b"])
+        # L2 normalize as in the paper
+        return h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True),
+                               1e-6)
+
+    for lyr in params["layers"]:
+        h = jax.checkpoint(layer)(h, lyr)
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_fn(params, batch: GraphBatch, cfg: SageConfig) -> jax.Array:
+    logits = apply(params, batch, cfg)
+    if cfg.out_kind == "graph":
+        from .common import graph_pool
+        pooled = graph_pool(logits, batch, "mean")
+        return jnp.mean(jnp.square(pooled[:, 0] - batch.labels))
+    labels = batch.labels
+    mask = (batch.seed_mask if batch.seed_mask is not None
+            else batch.node_mask)
+    mask = (mask if mask is not None
+            else jnp.ones((batch.n,), bool)).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.clip(labels, 0)[:, None], axis=-1)[:, 0]
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)

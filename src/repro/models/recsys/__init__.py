@@ -1,0 +1,4 @@
+"""RecSys family: MIND multi-interest retrieval + embedding substrate."""
+from .embedding import embedding_bag, sharded_lookup
+from .mind import (MINDConfig, init_params, param_specs, user_interests,
+                   train_loss, retrieval_scores)

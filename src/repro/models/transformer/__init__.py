@@ -1,0 +1,4 @@
+from .model import (MoECfg, LMConfig, init_params, param_specs, forward,
+                    loss_fn, make_train_step, make_prefill, make_decode_step,
+                    init_cache, cache_specs, count_params, active_params)
+from .attention import attention

@@ -1,0 +1,154 @@
+"""Attention paths: dense GQA, blocked (flash-style) causal, banded SWA.
+
+Pure-JAX online-softmax attention (lax.scan over KV blocks) — the memory-
+feasible path for 4k–32k sequences; lowers on every backend, which the
+512-device dry-run requires (Mosaic kernels cannot compile for the CPU
+stand-in devices). Three schedules:
+
+  * ``dense``     — small Sq·Sk and decode (one query against a cache).
+  * ``blocked``   — causal full attention: outer scan over q blocks, inner
+                    scan over all k blocks with masking. Baseline wastes ~2×
+                    FLOPs on fully-masked blocks (recorded as a §Perf
+                    hillclimb target).
+  * ``banded``    — sliding-window: each q block attends a static-size
+                    ``window + q_block`` slice via dynamic_slice — O(S·W)
+                    instead of O(S²); this is what makes the Mixtral
+                    ``long_500k`` cells sub-quadratic.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention"]
+
+_NEG = -1e30
+
+
+def _mask(q_pos, k_pos, window, k_valid):
+    m = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        m &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    if k_valid is not None:
+        m &= k_valid[:, None, :]
+    return m  # [B, Sq, Sk]
+
+
+def _dense(q, k, v, q_pos, k_pos, window, k_valid):
+    b, sq, hkv, g, dh = q.shape
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    m = _mask(q_pos, k_pos, window, k_valid)
+    scores = jnp.where(m[:, None, None], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+
+
+def _online_block(carry, kblk, vblk, qblk, qp, kp, window, scale):
+    """One online-softmax step. carry = (m, l, acc) for the q block."""
+    m_prev, l_prev, acc = carry
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                   preferred_element_type=jnp.float32) * scale
+    msk = _mask(qp, kp, window, None)
+    s = jnp.where(msk[:, None, None], s, _NEG)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[..., None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc = acc * alpha[..., None] + jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p.astype(qblk.dtype), vblk)
+    return m_cur, l_new, acc
+
+
+def _blocked(q, k, v, q_pos, k_pos, window, q_block, k_block):
+    b, sq, hkv, g, dh = q.shape
+    sk = k.shape[1]
+    nq = sq // q_block
+    nk = sk // k_block
+    scale = 1.0 / math.sqrt(dh)
+
+    qb = q.reshape(b, nq, q_block, hkv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    qpb = q_pos.reshape(b, nq, q_block).transpose(1, 0, 2)
+    kb = k.reshape(b, nk, k_block, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, k_block, hkv, dh).transpose(1, 0, 2, 3, 4)
+    kpb = k_pos.reshape(b, nk, k_block).transpose(1, 0, 2)
+
+    def per_q(_, qpack):
+        qblk, qp = qpack
+
+        def inner(carry, kpack):
+            kblk, vblk, kp = kpack
+            return _online_block(carry, kblk, vblk, qblk, qp, kp, window,
+                                 scale), None
+
+        init = (jnp.full((b, hkv, g, q_block), _NEG, jnp.float32),
+                jnp.zeros((b, hkv, g, q_block), jnp.float32),
+                jnp.zeros((b, hkv, g, q_block, dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(inner, init, (kb, vb, kpb))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return None, out.transpose(0, 3, 1, 2, 4)          # [B,qb,hkv,g,dh]
+
+    _, outs = jax.lax.scan(per_q, None, (qb, qpb))          # [nq,B,qb,...]
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hkv, g, dh)
+
+
+def _banded(q, k, v, q_pos, k_pos, window, q_block):
+    """SWA: q block at offset o attends k slice [o + qb − span, o + qb)."""
+    b, sq, hkv, g, dh = q.shape
+    sk = k.shape[1]
+    nq = sq // q_block
+    span = min(sk, window + q_block)
+    scale = 1.0 / math.sqrt(dh)
+    # pad left so every slice is in range
+    pad = span
+    kp_full = jnp.pad(k_pos, ((0, 0), (pad, 0)), constant_values=-10 ** 9)
+    k_full = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    v_full = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+    def per_q(_, i):
+        start = i * q_block                                 # traced
+        qblk = jax.lax.dynamic_slice_in_dim(q, start, q_block, 1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, start, q_block, 1)
+        ks = jax.lax.dynamic_slice_in_dim(k_full, start + q_block, span, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v_full, start + q_block, span, 1)
+        kp = jax.lax.dynamic_slice_in_dim(kp_full, start + q_block, span, 1)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, ks,
+                       preferred_element_type=jnp.float32) * scale
+        msk = _mask(qp, kp, window, None)
+        s = jnp.where(msk[:, None, None], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vs)
+        return None, out
+
+    _, outs = jax.lax.scan(per_q, None, jnp.arange(nq))
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hkv, g, dh)
+
+
+def attention(q, k, v, q_pos, k_pos, *, window: int | None,
+              k_valid=None, q_block: int = 512, k_block: int = 1024,
+              dense_threshold: int = 2048):
+    """GQA attention dispatcher.
+
+    q: [B, Sq, Hq, Dh]; k/v: [B, Sk, Hkv, Dh]. Returns [B, Sq, Hq·Dh].
+    """
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    sk = k.shape[1]
+    g = hq // hkv
+    q5 = q.reshape(b, sq, hkv, g, dh)
+
+    if sq <= 1 or sq * sk <= dense_threshold ** 2 or k_valid is not None:
+        out = _dense(q5, k, v, q_pos, k_pos, window, k_valid)
+    elif window is not None and sk > 2 * (window + q_block):
+        qb = min(q_block, sq)
+        out = _banded(q5, k, v, q_pos, k_pos, window, qb)
+    else:
+        qb = min(q_block, sq)
+        kbl = min(k_block, sk)
+        qb = math.gcd(qb, sq)
+        kbl = math.gcd(kbl, sk)
+        out = _blocked(q5, k, v, q_pos, k_pos, window, qb, kbl)
+    return out.reshape(b, sq, hq * dh)

@@ -1,0 +1,1 @@
+from .psi_driver import PsiDriver, DriverReport

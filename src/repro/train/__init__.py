@@ -1,0 +1,3 @@
+from .optim import (Optimizer, sgd, adamw, adafactor, global_norm,
+                    clip_by_global_norm, cosine_schedule, linear_schedule,
+                    constant_schedule)

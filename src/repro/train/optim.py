@@ -1,0 +1,212 @@
+"""Pure-JAX optimizers (no optax in the container — built per scope rule).
+
+All optimizers share one interface:
+
+    opt = adamw(schedule, ...)
+    state = opt.init(params)
+    params, state = opt.apply(grads, state, params)
+
+State pytrees mirror the param tree so pjit shards them identically to the
+parameters (critical for the memory budget of the big dry-run cells —
+Adafactor is the default for ≥100B configs, AdamW elsewhere; DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adamw", "adafactor", "global_norm",
+           "clip_by_global_norm", "cosine_schedule", "linear_schedule",
+           "constant_schedule"]
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+# --------------------------------------------------------------------- #
+# Schedules
+# --------------------------------------------------------------------- #
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_schedule(lr: float, total_steps: int, warmup: int = 0) -> Schedule:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, step / max(1, warmup))
+        decay = jnp.maximum(0.0, 1.0 - (step - warmup) /
+                            max(1, total_steps - warmup))
+        return lr * warm * jnp.where(step <= warmup, 1.0, decay)
+    return f
+
+
+def cosine_schedule(lr: float, total_steps: int, warmup: int = 0,
+                    final_frac: float = 0.1) -> Schedule:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, step / max(1, warmup))
+        t = jnp.clip((step - warmup) / max(1, total_steps - warmup), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * warm * cos
+    return f
+
+
+# --------------------------------------------------------------------- #
+# Utilities
+# --------------------------------------------------------------------- #
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    apply: Callable[[Any, Any, Any], tuple[Any, Any]]
+    name: str = "opt"
+
+
+# --------------------------------------------------------------------- #
+# SGD (+momentum)
+# --------------------------------------------------------------------- #
+def sgd(schedule: Schedule, momentum: float = 0.9,
+        clip_norm: float | None = None) -> Optimizer:
+    def init(params):
+        return dict(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                   params))
+
+    def apply(grads, state, params):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        lr = schedule(state["step"])
+        m = jax.tree.map(lambda m_, g: momentum * m_ + g.astype(jnp.float32),
+                         state["m"], grads)
+        params = jax.tree.map(lambda p, m_: (p.astype(jnp.float32) - lr * m_
+                                             ).astype(p.dtype), params, m)
+        return params, dict(step=state["step"] + 1, m=m)
+
+    return Optimizer(init, apply, "sgd")
+
+
+# --------------------------------------------------------------------- #
+# AdamW with fp32 master weights when params are low precision
+# --------------------------------------------------------------------- #
+def adamw(schedule: Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: float | None = 1.0,
+          keep_master: bool = True) -> Optimizer:
+    def init(params):
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = dict(step=jnp.zeros((), jnp.int32),
+                     m=jax.tree.map(zeros32, params),
+                     v=jax.tree.map(zeros32, params))
+        if keep_master:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def apply(grads, state, params):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr = schedule(step)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(g, m, v, master):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            master = master - lr * (u + weight_decay * master)
+            return m, v, master
+
+        masters = state.get("master") or jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+        out = jax.tree.map(upd, grads, state["m"], state["v"], masters)
+        m = jax.tree.map(lambda o: o[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        master = jax.tree.map(lambda o: o[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        params = jax.tree.map(lambda p, mst: mst.astype(p.dtype),
+                              params, master)
+        new_state = dict(step=step, m=m, v=v)
+        if keep_master:
+            new_state["master"] = master
+        return params, new_state
+
+    return Optimizer(init, apply, "adamw")
+
+
+# --------------------------------------------------------------------- #
+# Adafactor (factored second moment — the ≥100B-param default)
+# --------------------------------------------------------------------- #
+def adafactor(schedule: Schedule, eps: float = 1e-30,
+              clip_threshold: float = 1.0, decay: float = 0.8,
+              weight_decay: float = 0.0,
+              clip_norm: float | None = 1.0) -> Optimizer:
+    def _is_factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= 8 and p.shape[-2] >= 8
+
+    def init(params):
+        def per_param(p):
+            if _is_factored(p):
+                return dict(vr=jnp.zeros(p.shape[:-1], jnp.float32),
+                            vc=jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                         jnp.float32))
+            return dict(v=jnp.zeros(p.shape, jnp.float32))
+        return dict(step=jnp.zeros((), jnp.int32),
+                    stats=jax.tree.map(per_param, params))
+
+    def apply(grads, state, params):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr = schedule(step)
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, stats, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in stats:
+                vr = beta * stats["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * stats["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] /
+                    (jnp.mean(vr, axis=-1, keepdims=True)[..., None] + eps))
+                new_stats = dict(vr=vr, vc=vc)
+            else:
+                v = beta * stats["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(v)
+                new_stats = dict(v=v)
+            u = g / jnp.maximum(denom, eps)
+            # update clipping (Adafactor's RMS rule)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr * (u + weight_decay * p32)
+            return p32.astype(p.dtype), new_stats
+
+        out = jax.tree.map(upd, grads, state["stats"], params)
+        params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        stats = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return params, dict(step=step, stats=stats)
+
+    return Optimizer(init, apply, "adafactor")

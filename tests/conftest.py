@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see the default (1) device count — the 512-device forcing belongs to
+# launch/dryrun.py ONLY. Distributed tests spawn subprocesses instead.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

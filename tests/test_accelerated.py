@@ -1,0 +1,41 @@
+"""Beyond-paper Aitken-extrapolated Power-ψ (core/accelerated.py)."""
+import numpy as np
+import pytest
+
+from repro.graphs import erdos_renyi, powerlaw_configuration
+from repro.core import (heterogeneous, homogeneous, build_operators,
+                        power_psi, power_psi_accelerated, exact_psi)
+
+
+@pytest.mark.parametrize("regime", ["het", "hom"])
+def test_accelerated_matches_exact_with_fewer_matvecs(regime):
+    # fp32 here → tol 1e-6 (a jump can land in a basin whose fp32 plain
+    # iteration limit-cycles near 1e-6; the 1e-9 sweeps of the paper run in
+    # float64 where this does not occur — see benchmarks/exp2)
+    g = powerlaw_configuration(3000, 20000, seed=4)
+    act = heterogeneous(g.n, seed=5) if regime == "het" else homogeneous(g.n)
+    ops = build_operators(g, act)
+    base = power_psi(ops, tol=1e-6)
+    acc = power_psi_accelerated(ops, tol=1e-6)
+    psi_true, _ = exact_psi(g, act)
+    rel_b = np.linalg.norm(np.asarray(base.psi) - psi_true) / \
+        np.linalg.norm(psi_true)
+    rel_a = np.linalg.norm(np.asarray(acc.psi) - psi_true) / \
+        np.linalg.norm(psi_true)
+    assert rel_a < max(2 * rel_b, 1e-5)          # no accuracy loss
+    assert int(acc.matvecs) < int(base.matvecs)  # strictly fewer mat-vecs
+    assert bool(acc.converged)
+
+
+def test_accelerated_never_terminates_early_spuriously():
+    """The Eq. 19 guarantee: gap is always measured after a plain step."""
+    g = erdos_renyi(400, 2600, seed=6)
+    act = heterogeneous(g.n, seed=7)
+    ops = build_operators(g, act)
+    for tol in (1e-4, 1e-6, 1e-8):
+        acc = power_psi_accelerated(ops, tol=tol)
+        base = power_psi(ops, tol=1e-10)
+        # ψ from the accelerated run at tolerance `tol` is within the
+        # guaranteed band of the converged answer
+        delta = np.abs(np.asarray(acc.psi) - np.asarray(base.psi)).sum()
+        assert delta <= 10 * tol / g.n * g.n + 1e-6

@@ -1,0 +1,95 @@
+"""Registry completeness (the 10-arch assignment) + dry-run parser units."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch, list_archs
+from repro.launch.dryrun import parse_collectives, _shape_bytes
+
+
+def test_all_assigned_archs_present():
+    want = {"tinyllama-1.1b", "yi-9b", "nemotron-4-340b", "mixtral-8x22b",
+            "mixtral-8x7b", "pna", "equiformer-v2", "nequip",
+            "graphsage-reddit", "mind", "psi-score"}
+    assert want == set(list_archs())
+
+
+def test_arch_shape_cell_count():
+    """10 assigned archs × 4 shapes = 40 cells (+ψ's own)."""
+    cells = [(a, s.name) for a in ARCHS.values() if a.family != "psi"
+             for s in a.shapes]
+    assert len(cells) == 40
+    skips = [(a.arch_id, s.name) for a in ARCHS.values()
+             for s in a.shapes if s.skip]
+    # exactly the three pure-full-attention long_500k cells are skipped
+    assert sorted(skips) == [("nemotron-4-340b", "long_500k"),
+                             ("tinyllama-1.1b", "long_500k"),
+                             ("yi-9b", "long_500k")]
+
+
+def test_exact_assigned_configs():
+    """Config values must match the assignment table verbatim."""
+    c = get_arch("tinyllama-1.1b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (22, 2048, 32, 4, 5632, 32000)
+    c = get_arch("yi-9b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (48, 4096, 32, 4, 11008, 64000)
+    c = get_arch("nemotron-4-340b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.act) == (96, 18432, 96, 8, 73728, 256000, "sq_relu")
+    c = get_arch("mixtral-8x22b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab,
+            c.moe.n_experts, c.moe.top_k) == (56, 6144, 48, 8, 16384, 32768,
+                                              8, 2)
+    c = get_arch("mixtral-8x7b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab,
+            c.moe.n_experts, c.moe.top_k) == (32, 4096, 32, 8, 14336, 32000,
+                                              8, 2)
+    c = get_arch("pna").config()
+    assert (c.n_layers, c.d_hidden) == (4, 75)
+    c = get_arch("equiformer-v2").config()
+    assert (c.n_layers, c.d_hidden, c.l_max, c.m_max, c.n_heads) == \
+        (12, 128, 6, 2, 8)
+    c = get_arch("nequip").config()
+    assert (c.n_layers, c.d_hidden, c.l_max, c.n_rbf, c.cutoff) == \
+        (5, 32, 2, 8, 5.0)
+    c = get_arch("graphsage-reddit").config()
+    assert (c.n_layers, c.d_hidden, c.aggregator, c.sample_sizes) == \
+        (2, 128, "mean", (25, 10))
+    c = get_arch("mind").config()
+    assert (c.embed_dim, c.n_interests, c.capsule_iters) == (64, 4, 3)
+
+
+def test_shape_bytes_parser():
+    assert _shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert _shape_bytes("(bf16[8,4]{1,0}, s32[16])") == 8 * 4 * 2 + 16 * 4
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_scopes():
+    hlo = """
+HloModule mod
+%wbody.1 (p: f32[8]) -> f32[8] {
+  %x = f32[8]{0} all-reduce(f32[8]{0} %p), replica_groups={}
+  ROOT %r = f32[8]{0} add(%x, %x)
+}
+%wcond.2 (p: f32[8]) -> pred[] {
+  ROOT %t = pred[] constant(true)
+}
+ENTRY %main (a: f32[16]) -> f32[16] {
+  %g = f32[16]{0} all-gather(f32[8]{0} %a), dimensions={0}
+  %w = f32[8]{0} while(f32[8]{0} %g), condition=%wcond.2, body=%wbody.1
+  ROOT %out = f32[16]{0} all-gather(f32[8]{0} %w), dimensions={0}
+}
+"""
+    out = parse_collectives(hlo)
+    assert out["all-reduce"]["in_while"] == 32
+    assert out["all-reduce"]["top"] == 0
+    assert out["all-gather"]["top"] == 128
+    assert out["all-gather"]["count"] == 2
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_configs_instantiate(arch):
+    cfg = get_arch(arch).config(reduced=True)
+    assert cfg.name.endswith("-reduced") or "reduced" in cfg.name

@@ -1,0 +1,92 @@
+"""SO(3) machinery: representation properties that NequIP/EquiformerV2
+correctness rests on."""
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.gnn import so3
+
+angles = st.tuples(st.floats(-3.1, 3.1), st.floats(-0.99, 0.99))
+
+
+@pytest.mark.parametrize("l", range(7))
+def test_wigner_orthogonal(l):
+    rng = np.random.default_rng(l)
+    a = jnp.asarray(rng.uniform(-np.pi, np.pi, (4,)))
+    cb = jnp.asarray(rng.uniform(-1, 1, (4,)))
+    D = np.asarray(so3.wigner_real(l, a, cb))
+    eye = np.einsum("bij,bkj->bik", D, D)
+    assert np.abs(eye - np.eye(2 * l + 1)).max() < 1e-4
+
+
+@pytest.mark.parametrize("l", range(5))
+def test_sph_harm_norm(l):
+    rng = np.random.default_rng(7)
+    r = rng.normal(size=(6, 3))
+    r /= np.linalg.norm(r, axis=1, keepdims=True)
+    y = np.asarray(so3.sph_harm_all(l, jnp.asarray(r))[l])
+    want = math.sqrt((2 * l + 1) / (4 * math.pi))
+    assert np.abs(np.linalg.norm(y, axis=-1) - want).max() < 1e-5
+
+
+@given(angles)
+@settings(max_examples=10, deadline=None)
+def test_sph_harm_equivariance(ang):
+    """Y(R r) = D(R) Y(r) with R extracted from the l=1 block."""
+    alpha, cbeta = ang
+    rng = np.random.default_rng(0)
+    r = rng.normal(size=(5, 3))
+    r /= np.linalg.norm(r, axis=1, keepdims=True)
+    D1 = np.asarray(so3.wigner_real(1, jnp.asarray([alpha]),
+                                    jnp.asarray([cbeta])))[0]
+    M = np.array([[0., -1, 0], [0, 0, 1], [1, 0, 0]])   # xyz → (−y,z,x)
+    R = np.linalg.inv(M) @ D1 @ M
+    for l in range(4):
+        D = np.asarray(so3.wigner_real(l, jnp.asarray([alpha]),
+                                       jnp.asarray([cbeta])))[0]
+        y = np.asarray(so3.sph_harm_all(l, jnp.asarray(r))[l])
+        y_rot = np.asarray(so3.sph_harm_all(l, jnp.asarray(r @ R.T))[l])
+        assert np.abs(y_rot - y @ D.T).max() < 1e-4
+
+
+@pytest.mark.parametrize("path", [(1, 1, 0), (1, 1, 2), (2, 1, 1),
+                                  (2, 2, 2), (3, 2, 3), (6, 2, 6),
+                                  (6, 2, 5)])
+def test_cg_equivariance(path):
+    l1, l2, l3 = path
+    C = so3.real_cg(l1, l2, l3)
+    rng = np.random.default_rng(sum(path))
+    x = rng.normal(size=(2 * l1 + 1,))
+    y = rng.normal(size=(2 * l2 + 1,))
+    alpha, cbeta = 0.83, -0.41
+    ds = [np.asarray(so3.wigner_real(l, jnp.asarray([alpha]),
+                                     jnp.asarray([cbeta])))[0]
+          for l in (l1, l2, l3)]
+    lhs = np.einsum("pqr,p,q->r", C, ds[0] @ x, ds[1] @ y)
+    rhs = ds[2] @ np.einsum("pqr,p,q->r", C, x, y)
+    assert np.abs(lhs - rhs).max() < 1e-5
+
+
+def test_rotation_to_edge_frame_concentrates_m0():
+    """The eSCN precondition: D(angles(r̂))ᵀ Y(r̂) has support only at m=0."""
+    rng = np.random.default_rng(3)
+    r = rng.normal(size=(10, 3))
+    r /= np.linalg.norm(r, axis=1, keepdims=True)
+    rh = jnp.asarray(r)
+    al, cb = so3.rotation_angles(rh)
+    for l in (1, 2, 4, 6):
+        D = np.asarray(so3.wigner_real(l, al, cb))
+        y = np.asarray(so3.sph_harm_all(l, rh)[l])
+        rot = np.einsum("bmk,bm->bk", D, y)
+        off = np.abs(np.delete(rot, l, axis=1)).max()
+        assert off < 1e-4
+        assert np.all(rot[:, l] > 0)
+
+
+def test_m_truncation_index():
+    idx = so3.m_truncation_index(2, 1)
+    # l=0: m=0 → 0; l=1: m=-1,0,1 → 1,2,3; l=2: m=-1,0,1 → 5,6,7
+    assert idx.tolist() == [0, 1, 2, 3, 5, 6, 7]

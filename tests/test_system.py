@@ -1,0 +1,117 @@
+"""End-to-end behaviour of the paper's system (Power-ψ vs baselines)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.graphs import erdos_renyi, powerlaw_configuration, load_dataset
+from repro.core import (heterogeneous, homogeneous, build_operators,
+                        power_psi, power_psi_fixed, power_nf, exact_psi,
+                        build_pagerank_ops, pagerank, PsiService,
+                        dense_operators)
+
+
+@pytest.fixture(scope="module")
+def small():
+    g = erdos_renyi(300, 2100, seed=3)
+    act = heterogeneous(g.n, seed=5)
+    return g, act, build_operators(g, act)
+
+
+def test_power_psi_matches_exact(small):
+    g, act, ops = small
+    res = power_psi(ops, tol=1e-10)
+    psi_true, _ = exact_psi(g, act)
+    rel = np.linalg.norm(res.psi - psi_true) / np.linalg.norm(psi_true)
+    assert rel < 1e-5
+    assert bool(res.converged)
+
+
+def test_power_nf_matches_exact_and_costs_more(small):
+    """Alg. 1 reaches the same answer with orders more mat-vecs (Fig. 4)."""
+    g, act, ops = small
+    nf = power_nf(ops, tol=1e-10, chunk=64)
+    psi_true, _ = exact_psi(g, act)
+    rel = np.linalg.norm(nf.psi - psi_true) / np.linalg.norm(psi_true)
+    assert rel < 1e-5
+    ps = power_psi(ops, tol=1e-10)
+    assert nf.matvecs > 50 * int(ps.matvecs)
+
+
+def test_homogeneous_equals_pagerank(small):
+    """[10, Thm 5]: ψ(λ, μ const) == PageRank(α = μ/(λ+μ))."""
+    g, _, _ = small
+    act = homogeneous(g.n, lam=0.15, mu=0.85)
+    ops = build_operators(g, act)
+    res = power_psi(ops, tol=1e-12)
+    pr = pagerank(build_pagerank_ops(g), alpha=0.85, tol=1e-12)
+    assert np.abs(np.asarray(res.psi) - np.asarray(pr.pi)).max() < 1e-6
+
+
+def test_truncation_bound_eq19(small):
+    """δ_t ≤ ε_t·‖B‖/N for every iteration t (Eq. 19)."""
+    g, act, ops = small
+    n_iter = 25
+    _, _, gaps = power_psi_fixed(ops, n_iter)
+    psis = [np.asarray(power_psi_fixed(ops, t)[0]) for t in range(1, n_iter)]
+    for t in range(1, len(psis)):
+        delta = np.abs(psis[t] - psis[t - 1]).sum()
+        eps = float(gaps[t])              # ‖s_t − s_{t−1}‖₁
+        bound = eps * float(ops.b_norm) / g.n
+        assert delta <= bound * (1 + 1e-3) + 1e-12
+
+
+def test_dense_operator_oracle(small):
+    """Edge-form push equals the dense matrix product."""
+    g, act, ops = small
+    A, B, c, d = dense_operators(g, act)
+    s = np.random.default_rng(0).uniform(size=g.n)
+    want_sa = s @ A
+    got_sa = np.asarray(ops.left_matvec(jnp.asarray(s, jnp.float32)))
+    assert np.abs(want_sa - got_sa).max() < 1e-4
+    want_psi = (s @ B + d) / g.n
+    got_psi = np.asarray(ops.psi_epilogue(jnp.asarray(s, jnp.float32)))
+    assert np.abs(want_psi - got_psi).max() < 1e-6
+
+
+def test_warm_start_converges_faster(small):
+    g, act, ops = small
+    cold = power_psi(ops, tol=1e-9)
+    act2 = heterogeneous(g.n, seed=5)
+    act2.mu[:10] *= 1.05
+    ops2 = build_operators(g, act2)
+    warm = power_psi(ops2, tol=1e-9, s0=cold.s)
+    cold2 = power_psi(ops2, tol=1e-9)
+    assert int(warm.iterations) < int(cold2.iterations)
+
+
+def test_psi_service_updates_and_ranks():
+    g = erdos_renyi(120, 700, seed=9)
+    act = heterogeneous(g.n, seed=1)
+    svc = PsiService(g, act, tol=1e-9)
+    top, scores = svc.top_k(5)
+    assert scores.shape == (5,) and np.all(np.diff(scores) <= 0)
+    u = int(top[-1])
+    before = svc.scores()[u]
+    svc.update_activity(np.asarray([u]), lam=np.asarray([5.0]))
+    after = svc.scores()[u]
+    assert after > before        # posting more raises own influence
+
+
+def test_dataset_standins_match_table_ii():
+    g = load_dataset("dblp")
+    assert g.n == 12_591 and g.m == 49_743
+    # heavy-tailed: max in-degree far above mean
+    assert g.in_degree.max() > 20 * max(1.0, g.in_degree.mean())
+
+
+def test_dangling_nodes_are_safe():
+    # node 4 follows nobody (zero row in A) — must not produce NaN
+    from repro.graphs.structure import Graph
+    g = Graph(5, np.array([0, 1, 2], np.int32), np.array([1, 2, 0], np.int32))
+    act = heterogeneous(5, seed=0)
+    ops = build_operators(g, act)
+    res = power_psi(ops, tol=1e-10)
+    assert np.all(np.isfinite(np.asarray(res.psi)))
+    psi_true, _ = exact_psi(g, act)
+    assert np.abs(np.asarray(res.psi) - psi_true).max() < 1e-5
