@@ -1,0 +1,37 @@
+"""Engine parity benchmark: every registered backend on the same graph.
+
+For each backend: cold solve wall-time, warm (s0 = s*) re-solve wall-time,
+and L∞ disagreement of ψ against the ``reference`` backend — the serving
+story in one table. Run via ``python -m benchmarks.run --only engines``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+
+
+def run(quick: bool = False) -> None:
+    from repro.graphs import powerlaw_configuration
+    from repro.core import heterogeneous, available_backends, make_engine
+
+    n, m = (2_000, 14_000) if quick else (20_000, 140_000)
+    g = powerlaw_configuration(n, m, seed=17)
+    act = heterogeneous(g.n, seed=18)
+    tol = 1e-8
+
+    order = ["reference"] + [b for b in available_backends()
+                             if b != "reference"]
+    ref_psi = None
+    for name in order:
+        eng = make_engine(name, graph=g, activity=act)
+        res = eng.run(tol=tol)          # compile + converge once
+        psi = np.asarray(res.psi)
+        if ref_psi is None:
+            ref_psi = psi
+        linf = np.abs(psi - ref_psi).max()
+        cold = timeit(lambda: eng.run(tol=tol), warmup=0, iters=3)
+        warm = timeit(lambda: eng.run(tol=tol, s0=res.s), warmup=0, iters=3)
+        emit(f"engine/{name}/cold_n{n}", cold,
+             f"iters={int(res.iterations)}")
+        emit(f"engine/{name}/warm_n{n}", warm, f"linf_vs_ref={linf:.2e}")

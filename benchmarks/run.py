@@ -13,13 +13,15 @@ def main() -> None:
                     help="reduced tolerance sweeps / small graphs")
     ap.add_argument("--only", default=None,
                     choices=[None, "exp1", "exp2", "exp3", "kernels",
-                             "roofline"])
+                             "roofline", "engines"])
     args = ap.parse_args()
 
     from benchmarks.common import header
-    from benchmarks import (exp1_error, exp2_matvecs, exp3_runtime,
-                            kernel_bench, roofline)
+    from benchmarks import (engine_parity, exp1_error, exp2_matvecs,
+                            exp3_runtime, kernel_bench, roofline)
     header()
+    if args.only in (None, "engines"):
+        engine_parity.run(quick=args.quick)
     if args.only in (None, "exp1"):
         exp1_error.run(quick=args.quick)
     if args.only in (None, "exp2"):

@@ -1,0 +1,26 @@
+"""Cross-version JAX API shims — the single home for version drift.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed its replication-check kwarg ``check_rep`` → ``check_vma`` along the
+way. Every sharded module routes through this wrapper so the rest of the code
+is version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+try:                                      # jax >= 0.6: top-level export
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:                    # jax 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """Portable ``shard_map`` with the replication check disabled by default
+    (all call sites in this repo pass explicit out_specs)."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})

@@ -1,18 +1,23 @@
 """ψ-score core: the paper's contribution (Power-ψ) plus baselines."""
 from .activity import Activity, heterogeneous, homogeneous
-from .operators import PsiOperators, build_operators, dense_operators
+from .operators import (PsiOperators, HostOperators, build_operators,
+                        dense_operators)
 from .power_psi import PsiResult, power_psi, power_psi_fixed
 from .power_nf import PowerNFResult, power_nf
 from .pagerank import PageRankResult, build_pagerank_ops, pagerank
 from .exact import exact_psi
-from .incremental import PsiService
+from .engine import (ConvergenceCriterion, EngineState, PsiEngine,
+                     make_engine, register_backend, available_backends)
+from .incremental import PsiService, RankingCache
 from .accelerated import power_psi_accelerated
 
 __all__ = [
     "Activity", "heterogeneous", "homogeneous",
-    "PsiOperators", "build_operators", "dense_operators",
+    "PsiOperators", "HostOperators", "build_operators", "dense_operators",
     "PsiResult", "power_psi", "power_psi_fixed",
     "PowerNFResult", "power_nf",
     "PageRankResult", "build_pagerank_ops", "pagerank",
-    "exact_psi", "PsiService", "power_psi_accelerated",
+    "exact_psi", "PsiService", "RankingCache", "power_psi_accelerated",
+    "ConvergenceCriterion", "EngineState", "PsiEngine",
+    "make_engine", "register_backend", "available_backends",
 ]

@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from ..compat import shard_map
 
 from ..graphs.partition import Partition2D, partition_2d
 from ..graphs.structure import Graph
@@ -185,8 +186,7 @@ class DistributedPsi:
         return shard_map(
             local_step, mesh=self.mesh,
             in_specs=(P(src_axes, None), a_specs),
-            out_specs=(P(src_axes, None), P()),
-            check_vma=False)
+            out_specs=(P(src_axes, None), P()))
 
     def make_epilogue(self):
         """ψ from converged s: one more push, then (λ⊙t + d)/N, dst layout."""
@@ -220,8 +220,7 @@ class DistributedPsi:
         return shard_map(
             local_epilogue, mesh=self.mesh,
             in_specs=(src_spec, arr_specs),
-            out_specs=P(src_axes, "model", None),
-            check_vma=False)
+            out_specs=P(src_axes, "model", None))
 
     # ------------------------------------------------------------------ #
     def make_run(self, *, chunk_iters: int = 8, unroll: bool = False):
@@ -347,7 +346,7 @@ class DistributedPsi1D:
         # this shard_map deadlocks the XLA CPU in-process communicator
         # (runtime quirk; compile is fine either way).
 
-        return jax.shard_map(
+        return shard_map(
             local_step, mesh=self.mesh,
             in_specs=(P(), P(self.axes, None), P(self.axes, None),
                       P(), P(), P()),

@@ -1,0 +1,490 @@
+"""Unified Power-ψ solver abstraction: one protocol, three backends.
+
+Before this module the repo had four disjoint solver loops (``power_psi``,
+``kernels.ops.PsiKernelEngine``, ``DistributedPsi.run_to_convergence`` and the
+``PsiService`` rebuild path), each with its own while-loop, convergence rule
+and warm-start story. ``PsiEngine`` folds them behind one contract:
+
+    prepare(graph, activity) -> EngineState     # build operators, s₀ = c
+    step(state) -> EngineState                  # one Alg. 2 iteration
+    run(tol=..., max_iter=..., s0=...) -> PsiResult
+    epilogue(s) -> psi                          # ψᵀ = (sᵀB + dᵀ)/N
+
+Backends are registered by name and constructed through
+:func:`make_engine`:
+
+  * ``reference``   — the edge-form ``segment_sum`` iteration of
+    :mod:`repro.core.power_psi` (works everywhere, float64-capable).
+  * ``pallas``      — the fused TPU ``power_step`` Pallas kernel
+    (interpret mode off-TPU); absorbs the old ``PsiKernelEngine``.
+  * ``distributed`` — the 2-D block-cyclic ``shard_map`` schedule of
+    :class:`repro.core.distributed.DistributedPsi`, driven in host-side
+    chunks exactly like ``runtime/psi_driver.py``.
+
+All backends share one :class:`ConvergenceCriterion` — ε on ‖B‖·‖Δs‖ per
+Eq. 19 — and report interchangeable :class:`~repro.core.power_psi.PsiResult`
+values (``s`` always returned in node order so a result from one backend can
+warm-start any other). Engines also expose the O(Δ) delta-rebuild hooks
+(``patch_activity`` / ``patch_edges``) the serving layer
+(:class:`repro.core.incremental.PsiService`) is built on; a hook returns
+``False`` when the backend cannot patch incrementally and the caller should
+fall back to a full ``prepare``.
+
+Registering a new backend (see docs/ENGINE.md)::
+
+    @register_backend("mine")
+    class MyEngine(PsiEngine):
+        ...
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.structure import Graph
+from .activity import Activity
+from .operators import HostOperators, PsiOperators
+from .power_psi import _NORMS, PsiResult
+
+__all__ = ["ConvergenceCriterion", "EngineState", "PsiEngine",
+           "ReferenceEngine", "PallasEngine", "DistributedEngine",
+           "make_engine", "register_backend", "available_backends"]
+
+
+# --------------------------------------------------------------------- #
+# Shared convergence contract
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ConvergenceCriterion:
+    """Alg. 2 termination rule, identical across backends.
+
+    Stop when ``scale · ‖s_t − s_{t−1}‖_norm ≤ tol`` with ``scale = ‖B‖``
+    when ``use_b_norm`` (Eq. 19: the ψ trajectory then moved ≤ tol/N), else
+    1. ``matvecs`` accounting is shared too: one sparse mat-vec per
+    iteration plus one for the ψ epilogue.
+    """
+
+    tol: float = 1e-9
+    max_iter: int = 10_000
+    norm: str = "l1"
+    use_b_norm: bool = True
+
+    def __post_init__(self):
+        if self.norm not in _NORMS:
+            raise ValueError(f"unknown norm {self.norm!r}; "
+                             f"choose from {sorted(_NORMS)}")
+
+    def norm_fn(self):
+        return _NORMS[self.norm]
+
+    def scale(self, b_norm) -> float:
+        return float(b_norm) if self.use_b_norm else 1.0
+
+    def resolve(self, tol: float | None,
+                max_iter: int | None) -> tuple[float, int]:
+        return (self.tol if tol is None else float(tol),
+                self.max_iter if max_iter is None else int(max_iter))
+
+
+@dataclasses.dataclass
+class EngineState:
+    """Backend-agnostic iteration state. ``s`` lives in the backend's native
+    layout (node order / padded / sharded src layout)."""
+
+    s: Any
+    gap: float = float("inf")
+    t: int = 0
+
+
+# --------------------------------------------------------------------- #
+# Protocol + registry
+# --------------------------------------------------------------------- #
+class PsiEngine(abc.ABC):
+    """One (graph, activity) pair's solver; see module docstring."""
+
+    name: str = "abstract"
+
+    def __init__(self, *, dtype=jnp.float32,
+                 criterion: ConvergenceCriterion | None = None):
+        self.dtype = dtype
+        self.criterion = criterion or ConvergenceCriterion()
+        self._graph: Graph | None = None
+        self._graph_stale = False
+        self.host: HostOperators | None = None
+        self.ops: PsiOperators | None = None
+
+    @property
+    def graph(self) -> Graph | None:
+        if self._graph_stale:                # edges patched since last look
+            self._graph = self.host.graph()
+            self._graph_stale = False
+        return self._graph
+
+    # -- lifecycle ------------------------------------------------------ #
+    @abc.abstractmethod
+    def prepare(self, graph: Graph, activity: Activity) -> EngineState:
+        """Build device operators; returns the cold-start state (s₀ = c)."""
+
+    @abc.abstractmethod
+    def run(self, *, tol: float | None = None, max_iter: int | None = None,
+            s0: np.ndarray | jax.Array | None = None) -> PsiResult:
+        """Iterate to the criterion; ``s0`` (node order) warm-starts."""
+
+    def epilogue(self, s) -> jax.Array:
+        """ψᵀ = (sᵀB + dᵀ)/N from a node-order series vector."""
+        return self.ops.psi_epilogue(jnp.asarray(np.asarray(s), self.dtype))
+
+    # -- delta rebuild hooks (serving runtime) -------------------------- #
+    def patch_activity(self, users, lam=None, mu=None) -> bool:
+        """O(Δ) activity patch; False → caller must re-``prepare``."""
+        return False
+
+    def patch_edges(self, src, dst) -> bool:
+        """O(Δ) edge insertion; False → caller must re-``prepare``."""
+        return False
+
+    # -- shared helpers ------------------------------------------------- #
+    @property
+    def activity(self) -> Activity:
+        return self.host.activity()
+
+    def _base_prepare(self, graph: Graph, activity: Activity) -> None:
+        self._graph = graph
+        self._graph_stale = False
+        self.host = HostOperators.from_graph(graph, activity)
+        self.ops = self.host.to_device(self.dtype)
+
+    def _scale(self) -> jax.Array:
+        return (self.ops.b_norm if self.criterion.use_b_norm
+                else jnp.asarray(1.0, self.ops.dtype))
+
+    def _step_args(self):
+        """What the engine's jitted ``one_step(args, s)`` closure consumes."""
+        return self.ops
+
+    def step(self, state: EngineState) -> EngineState:
+        """One Alg. 2 iteration ``s ← sᵀA + c`` with the shared gap rule."""
+        s_new, raw = self._step_jit(self._step_args(), state.s)
+        return EngineState(s=s_new, gap=float(self._scale()) * float(raw),
+                           t=state.t + 1)
+
+    def _s0_node_order(self, s0) -> jax.Array:
+        if s0 is None:
+            return self.ops.c
+        s0 = jnp.asarray(np.asarray(s0), self.dtype)
+        if s0.shape != (self.ops.n,):
+            raise ValueError(f"s0 must be f[{self.ops.n}] in node order; "
+                             f"got {s0.shape}")
+        return s0
+
+    def _result(self, psi, s, gap, t, tol) -> PsiResult:
+        return PsiResult(psi=psi, s=s, iterations=jnp.asarray(t, jnp.int32),
+                         gap=jnp.asarray(gap, self.dtype),
+                         converged=jnp.asarray(float(gap) <= tol),
+                         matvecs=jnp.asarray(int(t) + 1, jnp.int32))
+
+
+_REGISTRY: dict[str, type[PsiEngine]] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: make the engine constructible by ``make_engine(name)``."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_engine(backend: str = "reference", *, graph: Graph | None = None,
+                activity: Activity | None = None, **opts) -> PsiEngine:
+    """Factory: construct (and, when given a graph, prepare) a backend."""
+    try:
+        cls = _REGISTRY[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"available: {available_backends()}") from None
+    engine = cls(**opts)
+    if graph is not None:
+        if activity is None:
+            raise ValueError("graph given without activity")
+        engine.prepare(graph, activity)
+    return engine
+
+
+# --------------------------------------------------------------------- #
+# Shared while-loop builder — operators travel as pytree *arguments* so a
+# delta patch never retraces: the jit cache keys on array shapes only
+# (activity patches and sentinel-slot edge inserts preserve shapes).
+# --------------------------------------------------------------------- #
+def _make_loop(step_with_gap):
+    """``step_with_gap(args, s) -> (s_new, raw_gap)`` →
+    jitted ``loop(args, s0, scale, tol, max_iter) -> (s, gap, t)``."""
+
+    @jax.jit
+    def loop(args, s0, scale, tol, max_iter):
+        def cond(st):
+            _, gap, t = st
+            return (gap > tol) & (t < max_iter)
+
+        def body(st):
+            s, _, t = st
+            s_new, raw = step_with_gap(args, s)
+            return s_new, scale * raw, t + 1
+
+        return jax.lax.while_loop(
+            cond, body, (s0, jnp.asarray(jnp.inf, s0.dtype),
+                         jnp.asarray(0, jnp.int32)))
+
+    return loop
+
+
+# --------------------------------------------------------------------- #
+# reference — edge-form segment_sum iteration (power_psi semantics)
+# --------------------------------------------------------------------- #
+@register_backend("reference")
+class ReferenceEngine(PsiEngine):
+    """The paper-faithful Alg. 2 loop on :class:`PsiOperators`."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        nrm = self.criterion.norm_fn()
+
+        def one_step(ops, s):
+            s_new = ops.mu * ops.push(s) + ops.c
+            return s_new, nrm(s_new - s)
+
+        self._loop = _make_loop(one_step)
+        self._step_jit = jax.jit(one_step)
+
+    def prepare(self, graph: Graph, activity: Activity) -> EngineState:
+        self._base_prepare(graph, activity)
+        return EngineState(s=self.ops.c)
+
+    def run(self, *, tol=None, max_iter=None, s0=None) -> PsiResult:
+        tol, max_iter = self.criterion.resolve(tol, max_iter)
+        s, gap, t = self._loop(
+            self.ops, self._s0_node_order(s0), self._scale(),
+            jnp.asarray(tol, self.ops.dtype),
+            jnp.asarray(max_iter, jnp.int32))
+        return self._result(self.ops.psi_epilogue(s), s, gap, t, tol)
+
+    def patch_activity(self, users, lam=None, mu=None) -> bool:
+        self.host.patch_activity(users, lam=lam, mu=mu)
+        self.ops = self.host.refresh_node_arrays(self.ops, self.dtype)
+        return True
+
+    def patch_edges(self, src, dst) -> bool:
+        self.host.patch_edges(src, dst)
+        self._graph_stale = True
+        self.ops = self.host.to_device(self.dtype)   # edge arrays grew
+        return True
+
+
+# --------------------------------------------------------------------- #
+# pallas — fused TPU power_step kernel (absorbs PsiKernelEngine)
+# --------------------------------------------------------------------- #
+@register_backend("pallas")
+class PallasEngine(PsiEngine):
+    """Alg. 2 driven by the fused Pallas edge-tile kernel.
+
+    The kernel computes the raw L1 gap on-chip, so the criterion's norm must
+    be ``l1`` (the paper's choice). Activity patches only refresh the padded
+    node vectors; edge patches are placed into free sentinel slots of the
+    edge-tile format and fall back to an edge-tile rebuild (never a full
+    operator rebuild) when a tile overflows.
+    """
+
+    def __init__(self, *, tile: int = 256, e1: int = 8, e2: int = 128,
+                 interpret: bool | None = None, **kw):
+        super().__init__(**kw)
+        if self.criterion.norm != "l1":
+            raise ValueError("pallas backend computes the gap on-chip in l1; "
+                             f"got norm={self.criterion.norm!r}")
+        from ..kernels.ops import default_interpret, power_step
+        self.tile, self.e1, self.e2 = tile, e1, e2
+        self.interpret = (default_interpret() if interpret is None
+                          else interpret)
+        interp = self.interpret
+
+        def one_step(args, s):
+            fmt, inv_w_g, mu_pad, c_pad = args
+            return power_step(s, inv_w_g, mu_pad, c_pad, fmt,
+                              interpret=interp)
+
+        self._loop = _make_loop(one_step)
+        self._step_jit = jax.jit(one_step)
+
+    def prepare(self, graph: Graph, activity: Activity) -> EngineState:
+        from ..kernels.formats import build_edge_tiles
+        from ..kernels.ops import DeviceEdgeTiles
+        self._base_prepare(graph, activity)
+        self.fmt_host = build_edge_tiles(graph, tile=self.tile, e1=self.e1,
+                                         e2=self.e2)
+        self.fmt = DeviceEdgeTiles.from_format(self.fmt_host)
+        self._refresh_padded()
+        return EngineState(s=self.fmt.pad_node_vector(self.ops.c))
+
+    def _refresh_padded(self) -> None:
+        f = self.fmt
+        self._mu_pad = f.pad_node_vector(self.ops.mu)
+        self._c_pad = f.pad_node_vector(self.ops.c)
+        self._inv_w_gather = f.pad_gather_source(self.ops.inv_w)
+
+    def _step_args(self):
+        return (self.fmt, self._inv_w_gather, self._mu_pad, self._c_pad)
+
+    def run(self, *, tol=None, max_iter=None, s0=None) -> PsiResult:
+        tol, max_iter = self.criterion.resolve(tol, max_iter)
+        s_init = self.fmt.pad_node_vector(self._s0_node_order(s0))
+        s, gap, t = self._loop(self._step_args(), s_init, self._scale(),
+                               jnp.asarray(tol, self.ops.dtype),
+                               jnp.asarray(max_iter, jnp.int32))
+        s_n = s[0, :self.fmt.n]
+        return self._result(self.ops.psi_epilogue(s_n), s_n, gap, t, tol)
+
+    # -- delta rebuilds ------------------------------------------------- #
+    def patch_activity(self, users, lam=None, mu=None) -> bool:
+        self.host.patch_activity(users, lam=lam, mu=mu)
+        self.ops = self.host.refresh_node_arrays(self.ops, self.dtype)
+        self._refresh_padded()
+        return True
+
+    def patch_edges(self, src, dst) -> bool:
+        from ..kernels.formats import build_edge_tiles
+        from ..kernels.ops import DeviceEdgeTiles
+        src, dst = self.host.patch_edges(src, dst)
+        self._graph_stale = True
+        slots = self._insert_into_tiles(src, dst)
+        if slots is None:
+            # a tile ran out of sentinel slots — rebuild the edge-tile
+            # format only (the operator arrays stay incrementally patched;
+            # the shape change means the next run() retraces once)
+            self.fmt_host = build_edge_tiles(self.graph, tile=self.tile,
+                                             e1=self.e1, e2=self.e2)
+            self.fmt = DeviceEdgeTiles.from_format(self.fmt_host)
+        elif slots:
+            # fast path: scatter the few new slots into the device-resident
+            # format instead of re-uploading all M edges
+            src_idx, dst_local = self.fmt.src_idx, self.fmt.dst_local
+            for b, slot, s_id, d_loc in slots:
+                i, j = divmod(slot, self.e2)
+                src_idx = src_idx.at[b, i, j].set(s_id)
+                dst_local = dst_local.at[b, i, j].set(d_loc)
+            self.fmt = dataclasses.replace(self.fmt, src_idx=src_idx,
+                                           dst_local=dst_local)
+        self.ops = self.host.to_device(self.dtype)   # edge arrays grew
+        self._refresh_padded()
+        return True
+
+    def _insert_into_tiles(self, src: np.ndarray, dst: np.ndarray):
+        """Place new edges into free (sentinel) slots of their dst tile.
+
+        Mutates the host format in place and returns the placed
+        ``(block, flat_slot, src_id, dst_local)`` tuples, or ``None`` when
+        some tile has no free slot left (caller rebuilds the format)."""
+        f = self.fmt_host
+        n, tile = f.n, f.tile
+        flat_src = f.src_idx.reshape(f.num_blocks, -1)
+        flat_dstl = f.dst_local.reshape(f.num_blocks, -1)
+        placed = []
+        for s, d in zip(src, dst):
+            t = int(d) // tile
+            blocks = np.nonzero(f.block_tile == t)[0]
+            for b in blocks:
+                free = np.nonzero(flat_src[b] == n)[0]
+                if free.size:
+                    slot = int(free[0])
+                    flat_src[b, slot] = s
+                    flat_dstl[b, slot] = int(d) - t * tile
+                    placed.append((int(b), slot, int(s), int(d) - t * tile))
+                    break
+            else:
+                return None
+        return placed
+
+
+# --------------------------------------------------------------------- #
+# distributed — 2-D block-cyclic shard_map schedule, host-chunked
+# --------------------------------------------------------------------- #
+@register_backend("distributed")
+class DistributedEngine(PsiEngine):
+    """Sharded Power-ψ over a (data, model) mesh.
+
+    The device program is a fixed-shape ``chunk_iters``-step scan; the
+    criterion is evaluated on the host between chunks (iteration counts are
+    therefore multiples of ``chunk_iters``), exactly the
+    ``runtime/psi_driver.py`` schedule. The gap norm must be ``l1`` (what the
+    sharded step psums). ``s`` is converted to/from node order at the API
+    boundary so results interchange with the other backends.
+    """
+
+    def __init__(self, *, mesh=None, chunk_iters: int = 16, **kw):
+        super().__init__(**kw)
+        if self.criterion.norm != "l1":
+            raise ValueError("distributed backend psums an l1 gap; "
+                             f"got norm={self.criterion.norm!r}")
+        self.mesh = mesh
+        self.chunk_iters = chunk_iters
+        self.dist = None
+
+    def prepare(self, graph: Graph, activity: Activity) -> EngineState:
+        from .distributed import DistributedPsi
+        self._base_prepare(graph, activity)
+        if self.mesh is None:
+            self.mesh = jax.make_mesh((len(jax.devices()), 1),
+                                      ("data", "model"))
+        self.dist = DistributedPsi.from_graph(graph, activity, self.mesh,
+                                              dtype=self.dtype)
+        self._run_chunk = self.dist.make_run(chunk_iters=self.chunk_iters)
+        self._one_step = jax.jit(self.dist.make_step())
+        self._epi = jax.jit(self.dist.make_epilogue())
+        return EngineState(s=self.dist.arrays.c_src)
+
+    def step(self, state: EngineState) -> EngineState:
+        s_new, gap = self._one_step(state.s, self.dist.arrays)
+        scale = self.criterion.scale(self.host.b_norm)
+        return EngineState(s=s_new, gap=scale * float(gap), t=state.t + 1)
+
+    def run(self, *, tol=None, max_iter=None, s0=None) -> PsiResult:
+        tol, max_iter = self.criterion.resolve(tol, max_iter)
+        part = self.dist.part
+        if s0 is None:
+            s = self.dist.arrays.c_src
+        else:
+            s_host = np.asarray(np.asarray(s0),
+                                np.dtype(jnp.dtype(self.dtype).name))
+            s = jax.device_put(
+                part.to_src_layout(s_host),
+                jax.sharding.NamedSharding(
+                    self.mesh,
+                    jax.sharding.PartitionSpec(self.dist.src_axes, None)))
+        scale = self.criterion.scale(self.host.b_norm)
+        it, gap = 0, float("inf")
+        while it < max_iter and gap > tol:
+            s, gap_dev = self._run_chunk(s, self.dist.arrays)
+            it += self.chunk_iters
+            gap = scale * float(gap_dev)
+        psi_piece = self._epi(s, self.dist.arrays)
+        psi = part.from_src_layout(
+            np.asarray(psi_piece).reshape(part.d, -1))
+        s_node = part.from_src_layout(np.asarray(jax.device_get(s)))
+        return self._result(jnp.asarray(psi, self.dtype),
+                            jnp.asarray(s_node, self.dtype), gap, it, tol)
+
+    def patch_activity(self, users, lam=None, mu=None) -> bool:
+        # partition and edge layouts are untouched; only the activity-derived
+        # device arrays are rebuilt (no re-partition, no edge re-sort)
+        self.host.patch_activity(users, lam=lam, mu=mu)
+        self.ops = self.host.refresh_node_arrays(self.ops, self.dtype)
+        self.dist.arrays = self.dist.build_arrays(self.graph, self.activity)
+        return True

@@ -1,12 +1,18 @@
-"""Incremental ψ-score service — warm-started recomputation for serving.
+"""Incremental ψ-score serving runtime — backend-pluggable, delta-rebuilt.
 
 The Alg. 2 iteration is an affine contraction (ρ(A) < 1), so after a graph or
 activity update the fixed point moves continuously; restarting the power
 iteration from the previous s* instead of c needs only
 O(log(‖Δs*‖/ε) / log(1/ρ)) iterations — typically a handful for small updates.
-This powers ``examples/influence_service.py`` and is also the fault-tolerance
-story for the distributed runner: s is the *entire* algorithm state, so a
-restart from the last checkpointed s is exact, not approximate.
+
+:class:`PsiService` is built on the unified :class:`~repro.core.engine.PsiEngine`
+abstraction: any registered backend (``reference``, ``pallas``,
+``distributed``) serves queries, every backend warm-starts from the previous
+fixed point, and mutations go through the engines' O(Δ) delta hooks
+(``patch_activity`` / ``patch_edges``) instead of a full operator rebuild.
+:class:`RankingCache` is the batched query layer shared with
+``launch/serve.py`` and ``runtime/psi_driver.py``: the descending order is
+computed once per fixed point and memoized until the next mutation.
 """
 from __future__ import annotations
 
@@ -14,75 +20,151 @@ import numpy as np
 
 from ..graphs.structure import Graph
 from .activity import Activity
-from .operators import build_operators
-from .power_psi import PsiResult, power_psi
+from .engine import PsiEngine, make_engine
+from .power_psi import PsiResult
 
-__all__ = ["PsiService"]
+__all__ = ["PsiService", "RankingCache"]
+
+
+class RankingCache:
+    """Batched query layer over one ψ fixed point.
+
+    Memoizes the descending sort (one ``argsort`` per fixed point, not per
+    query); ``top_k`` uses ``jax.lax.top_k`` so a device-resident ψ never
+    round-trips through a host sort for small k.
+    """
+
+    def __init__(self, psi):
+        self._psi_dev = psi                       # jax array (or numpy)
+        self._psi = np.asarray(psi)
+        self._order: np.ndarray | None = None
+        self._rank: np.ndarray | None = None
+
+    @property
+    def psi(self) -> np.ndarray:
+        return self._psi
+
+    def scores_batch(self, users: np.ndarray) -> np.ndarray:
+        return self._psi[np.asarray(users)]
+
+    def top_k(self, k: int) -> tuple[np.ndarray, np.ndarray]:
+        k = min(int(k), self._psi.size)           # clip like argsort[:k] did
+        if self._order is not None:               # sort already paid for
+            idx = self._order[:k]
+            return idx, self._psi[idx]
+        import jax
+        import jax.numpy as jnp
+        vals, idx = jax.lax.top_k(jnp.asarray(self._psi_dev), k)
+        return np.asarray(idx), np.asarray(vals)
+
+    def rank_of(self, users: np.ndarray) -> np.ndarray:
+        self._ensure_order()
+        return self._rank[np.asarray(users)]
+
+    def _ensure_order(self) -> None:
+        if self._order is None:
+            self._order = np.argsort(-self._psi, kind="stable")
+            rank = np.empty_like(self._order)
+            rank[self._order] = np.arange(self._order.size)
+            self._rank = rank
 
 
 class PsiService:
-    """Maintains ψ-scores for a mutable (graph, activity) pair."""
+    """Maintains ψ-scores for a mutable (graph, activity) pair.
+
+    Args:
+      graph, activity: the initial platform state.
+      tol / max_iter: shared convergence criterion for every (re)solve.
+      backend: engine name — ``reference`` (default), ``pallas`` or
+        ``distributed``; see :func:`repro.core.engine.make_engine`.
+      engine_opts: extra backend kwargs (``tile=...``, ``mesh=...``, ...).
+    """
 
     def __init__(self, graph: Graph, activity: Activity, *, tol: float = 1e-8,
-                 dtype=None):
+                 max_iter: int = 10_000, backend: str = "reference",
+                 dtype=None, engine_opts: dict | None = None):
         import jax.numpy as jnp
-        self._dtype = dtype or jnp.float32
         self.tol = tol
-        self._graph = graph
-        self._activity = activity
-        self._ops = build_operators(graph, activity, dtype=self._dtype)
+        self.max_iter = max_iter
+        self._engine: PsiEngine = make_engine(
+            backend, graph=graph, activity=activity,
+            dtype=dtype or jnp.float32, **(engine_opts or {}))
         self._last: PsiResult | None = None
+        self._cache: RankingCache | None = None
 
     # -- queries -------------------------------------------------------- #
     @property
+    def backend(self) -> str:
+        return self._engine.name
+
+    @property
+    def engine(self) -> PsiEngine:
+        return self._engine
+
+    @property
     def graph(self) -> Graph:
-        return self._graph
+        return self._engine.graph
 
     def scores(self) -> np.ndarray:
-        return np.asarray(self._ensure().psi)
+        return self._query().psi
+
+    def scores_batch(self, users: np.ndarray) -> np.ndarray:
+        """ψ for a batch of users (no ranking sort paid)."""
+        return self._query().scores_batch(users)
 
     def top_k(self, k: int) -> tuple[np.ndarray, np.ndarray]:
-        psi = self.scores()
-        idx = np.argsort(-psi)[:k]
-        return idx, psi[idx]
+        return self._query().top_k(k)
 
     def rank_of(self, users: np.ndarray) -> np.ndarray:
-        order = np.argsort(-self.scores(), kind="stable")
-        rank = np.empty_like(order)
-        rank[order] = np.arange(order.size)
-        return rank[np.asarray(users)]
+        return self._query().rank_of(users)
 
     def last_iterations(self) -> int:
-        return int(self._ensure().iterations)
+        self._query()
+        return int(self._last.iterations)
 
     # -- mutations (each warm-starts from the previous s*) --------------- #
     def update_activity(self, users: np.ndarray, lam: np.ndarray | None = None,
                         mu: np.ndarray | None = None) -> None:
-        new_lam = self._activity.lam.copy()
-        new_mu = self._activity.mu.copy()
+        if not self._engine.patch_activity(users, lam=lam, mu=mu):
+            self._full_rebuild(activity=self._patched_activity(users, lam, mu))
+        self._resolve()
+
+    def add_edges(self, src: np.ndarray, dst: np.ndarray) -> None:
+        if not self._engine.patch_edges(src, dst):
+            g = self._engine.graph
+            merged = Graph(
+                g.n, np.concatenate([g.src, np.asarray(src, np.int32)]),
+                np.concatenate([g.dst, np.asarray(dst, np.int32)]),
+                name=g.name).dedup()
+            self._full_rebuild(graph=merged)
+        self._resolve()
+
+    # -- internals ------------------------------------------------------ #
+    def _patched_activity(self, users, lam, mu) -> Activity:
+        act = self._engine.activity
+        new_lam, new_mu = act.lam.copy(), act.mu.copy()
         if lam is not None:
             new_lam[np.asarray(users)] = lam
         if mu is not None:
             new_mu[np.asarray(users)] = mu
-        self._activity = Activity(new_lam, new_mu)
-        self._rebuild()
+        return Activity(new_lam, new_mu)
 
-    def add_edges(self, src: np.ndarray, dst: np.ndarray) -> None:
-        g = self._graph
-        self._graph = Graph(
-            g.n, np.concatenate([g.src, np.asarray(src, np.int32)]),
-            np.concatenate([g.dst, np.asarray(dst, np.int32)]),
-            name=g.name).dedup()
-        self._rebuild()
+    def _full_rebuild(self, graph: Graph | None = None,
+                      activity: Activity | None = None) -> None:
+        self._engine.prepare(graph or self._engine.graph,
+                             activity or self._engine.activity)
 
-    # -- internals ------------------------------------------------------ #
-    def _rebuild(self) -> None:
-        self._ops = build_operators(self._graph, self._activity,
-                                    dtype=self._dtype)
+    def _resolve(self) -> None:
         prev_s = None if self._last is None else self._last.s
-        self._last = power_psi(self._ops, tol=self.tol, s0=prev_s)
+        self._last = self._engine.run(tol=self.tol, max_iter=self.max_iter,
+                                      s0=prev_s)
+        self._cache = None                        # ranking invalidated
 
-    def _ensure(self) -> PsiResult:
+    def _query(self) -> RankingCache:
         if self._last is None:
-            self._last = power_psi(self._ops, tol=self.tol)
-        return self._last
+            self._last = self._engine.run(tol=self.tol,
+                                          max_iter=self.max_iter)
+            self._cache = None
+        if self._cache is None:
+            self._cache = RankingCache(self._last.psi)
+        return self._cache

@@ -32,7 +32,7 @@ import numpy as np
 from ..graphs.structure import Graph
 from .activity import Activity
 
-__all__ = ["PsiOperators", "build_operators"]
+__all__ = ["PsiOperators", "build_operators", "HostOperators"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +139,188 @@ def build_operators(graph: Graph, activity: Activity, *,
         c=dev(c), d=dev(d),
         b_norm=jnp.asarray(b_norm, dtype),
     )
+
+
+# ---------------------------------------------------------------------- #
+# Mutable host mirror — O(Δ) incremental patches for the serving runtime.
+# ---------------------------------------------------------------------- #
+def _concat_ranges(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    if lo.size == 0:
+        return np.empty(0, np.int64)
+    return np.concatenate([np.arange(l, h) for l, h in zip(lo, hi)])
+
+
+def _dedup_keep_last(users: np.ndarray, *cols: np.ndarray):
+    """Unique users, keeping the *last* occurrence of each (update semantics)."""
+    rev = users[::-1]
+    uniq, first_rev = np.unique(rev, return_index=True)
+    out_cols = tuple(None if c is None else np.asarray(c)[::-1][first_rev]
+                     for c in cols)
+    return uniq, out_cols
+
+
+@dataclasses.dataclass
+class HostOperators:
+    """Host-side (float64, numpy) mirror of the edge-form operator arrays.
+
+    Unlike :func:`build_operators` this state is *mutable* and supports
+    incremental patches that cost O(Δ) edge work plus O(N) vector work —
+    no edge re-sort, no full reconstruction:
+
+      * :meth:`patch_activity` — λ/μ updates touch only the followers of the
+        updated users (``w``/``row_lam`` scatter over those edges).
+      * :meth:`patch_edges` — new follow edges are merged into the two sorted
+        edge views with ``np.searchsorted`` + ``np.insert`` (one memmove, no
+        re-sort of the M existing edges).
+
+    ``to_device`` materializes a fresh :class:`PsiOperators` from the current
+    arrays; the float64 host accumulators keep repeated incremental patches
+    free of drift before the cast to the device dtype.
+    """
+
+    n: int
+    lam: np.ndarray          # f64[N]
+    mu: np.ndarray           # f64[N]
+    src_by_dst: np.ndarray   # i32[M] — dst-sorted view
+    dst_by_dst: np.ndarray   # i32[M]
+    src_by_src: np.ndarray   # i32[M] — src-sorted view
+    dst_by_src: np.ndarray   # i32[M]
+    w: np.ndarray            # f64[N] news-feed rates
+    row_lam: np.ndarray      # f64[N] Σ_{i∈L(j)} λ_i (the ‖B‖ numerator)
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_graph(cls, graph: Graph, activity: Activity) -> "HostOperators":
+        if activity.n != graph.n:
+            raise ValueError("activity/graph size mismatch")
+        lam = activity.lam.astype(np.float64).copy()
+        mu = activity.mu.astype(np.float64).copy()
+        total = lam + mu
+        w = np.zeros(graph.n)
+        np.add.at(w, graph.src, total[graph.dst])
+        row_lam = np.zeros(graph.n)
+        np.add.at(row_lam, graph.src, lam[graph.dst])
+        s_d, d_d = graph.edges_by_dst
+        s_s, d_s = graph.edges_by_src
+        return cls(n=graph.n, lam=lam, mu=mu,
+                   src_by_dst=s_d.copy(), dst_by_dst=d_d.copy(),
+                   src_by_src=s_s.copy(), dst_by_src=d_s.copy(),
+                   w=w, row_lam=row_lam)
+
+    @property
+    def m(self) -> int:
+        return int(self.src_by_dst.shape[0])
+
+    @property
+    def inv_w(self) -> np.ndarray:
+        return np.where(self.w > 0, 1.0 / np.where(self.w > 0, self.w, 1.0),
+                        0.0)
+
+    @property
+    def b_norm(self) -> float:
+        return float((self.row_lam * self.inv_w).max()) if self.n else 0.0
+
+    def activity(self) -> Activity:
+        return Activity(self.lam.copy(), self.mu.copy())
+
+    def graph(self) -> Graph:
+        """Rebuild a Graph view (src-sorted order, already deduped)."""
+        return Graph(self.n, self.src_by_src.copy(), self.dst_by_src.copy())
+
+    # ------------------------------------------------------------------ #
+    def patch_activity(self, users: np.ndarray, lam: np.ndarray | None = None,
+                       mu: np.ndarray | None = None) -> int:
+        """Apply λ/μ updates; returns the number of edges touched (Δ)."""
+        users = np.asarray(users, np.int64).reshape(-1)
+        if lam is not None:     # scalars / length-1 broadcast, like fancy
+            lam = np.broadcast_to(np.asarray(lam, np.float64), users.shape)
+        if mu is not None:      # indexing assignment did before the refactor
+            mu = np.broadcast_to(np.asarray(mu, np.float64), users.shape)
+        users, (lam, mu) = _dedup_keep_last(users, lam, mu)
+        new_lam = self.lam[users] if lam is None else lam
+        new_mu = self.mu[users] if mu is None else mu
+        dl = new_lam - self.lam[users]
+        dt = dl + (new_mu - self.mu[users])
+        self.lam[users] = new_lam
+        self.mu[users] = new_mu
+        # followers of each updated user form a contiguous dst-sorted slice
+        lo = np.searchsorted(self.dst_by_dst, users, side="left")
+        hi = np.searchsorted(self.dst_by_dst, users, side="right")
+        idx = _concat_ranges(lo, hi)
+        counts = hi - lo
+        fol = self.src_by_dst[idx]
+        np.add.at(self.w, fol, np.repeat(dt, counts))
+        np.add.at(self.row_lam, fol, np.repeat(dl, counts))
+        return int(counts.sum())
+
+    def patch_edges(self, src: np.ndarray,
+                    dst: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Merge new follow edges; returns the (src, dst) actually inserted
+        (self-loops and duplicates — in-batch or vs existing — are dropped)."""
+        src = np.asarray(src, np.int32).reshape(-1)
+        dst = np.asarray(dst, np.int32).reshape(-1)
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        key = src.astype(np.int64) * self.n + dst
+        _, uniq_idx = np.unique(key, return_index=True)
+        src, dst = src[uniq_idx], dst[uniq_idx]
+        fresh = np.ones(src.size, bool)
+        for k, (s, d) in enumerate(zip(src, dst)):     # Δ is small in serving
+            a = np.searchsorted(self.src_by_src, s, side="left")
+            b = np.searchsorted(self.src_by_src, s, side="right")
+            if np.any(self.dst_by_src[a:b] == d):
+                fresh[k] = False
+        src, dst = src[fresh], dst[fresh]
+        if src.size == 0:
+            return src, dst
+        # merge into the dst-sorted view
+        o = np.argsort(dst, kind="stable")
+        ins = np.searchsorted(self.dst_by_dst, dst[o], side="right")
+        self.src_by_dst = np.insert(self.src_by_dst, ins, src[o])
+        self.dst_by_dst = np.insert(self.dst_by_dst, ins, dst[o])
+        # merge into the src-sorted view
+        o2 = np.argsort(src, kind="stable")
+        ins2 = np.searchsorted(self.src_by_src, src[o2], side="right")
+        self.src_by_src = np.insert(self.src_by_src, ins2, src[o2])
+        self.dst_by_src = np.insert(self.dst_by_src, ins2, dst[o2])
+        # rate accumulators: each new edge (j → i) adds i's rates to j's feed
+        np.add.at(self.w, src, self.lam[dst] + self.mu[dst])
+        np.add.at(self.row_lam, src, self.lam[dst])
+        return src, dst
+
+    # ------------------------------------------------------------------ #
+    def _node_arrays(self, dtype) -> dict:
+        """The O(N) activity-derived device vectors (not the edge indices)."""
+        np_dtype = np.dtype(jnp.dtype(dtype).name)
+        total = self.lam + self.mu
+        with np.errstate(divide="ignore", invalid="ignore"):
+            c = np.where(total > 0, self.mu / total, 0.0)
+            d = np.where(total > 0, self.lam / total, 0.0)
+        return dict(
+            lam=jnp.asarray(self.lam.astype(np_dtype)),
+            mu=jnp.asarray(self.mu.astype(np_dtype)),
+            inv_w=jnp.asarray(self.inv_w.astype(np_dtype)),
+            c=jnp.asarray(c.astype(np_dtype)),
+            d=jnp.asarray(d.astype(np_dtype)),
+            b_norm=jnp.asarray(self.b_norm, dtype),
+        )
+
+    def to_device(self, dtype=jnp.float32) -> PsiOperators:
+        return PsiOperators(
+            n=self.n, m=self.m,
+            src_by_dst=jnp.asarray(self.src_by_dst),
+            dst_by_dst=jnp.asarray(self.dst_by_dst),
+            src_by_src=jnp.asarray(self.src_by_src),
+            dst_by_src=jnp.asarray(self.dst_by_src),
+            **self._node_arrays(dtype),
+        )
+
+    def refresh_node_arrays(self, ops: PsiOperators,
+                            dtype=jnp.float32) -> PsiOperators:
+        """Post-``patch_activity`` refresh: re-upload only the O(N) node
+        vectors, reusing the device-resident O(M) edge indices (an activity
+        patch never touches them)."""
+        return dataclasses.replace(ops, **self._node_arrays(dtype))
 
 
 # ---------------------------------------------------------------------- #

@@ -164,51 +164,25 @@ def power_step(s: jax.Array, inv_w_gather: jax.Array, mu_pad: jax.Array,
 
 
 # --------------------------------------------------------------------- #
-# Full Power-ψ on the fused kernel
+# Full Power-ψ on the fused kernel — absorbed by the unified engine
 # --------------------------------------------------------------------- #
 class PsiKernelEngine:
-    """Alg. 2 driven entirely by the fused Pallas step (kernel perf path)."""
+    """Back-compat shim: the fused-kernel solver now lives in
+    ``repro.core.engine`` as the ``pallas`` backend — construct it with
+    ``make_engine("pallas", graph=..., activity=...)``. This wrapper keeps
+    the historical constructor/run signature working."""
 
     def __init__(self, graph, activity, *, tile: int = 256, e1: int = 8,
                  e2: int = 128, dtype=jnp.float32,
                  interpret: bool | None = None):
-        from ..core.operators import build_operators
-        self.ops = build_operators(graph, activity, dtype=dtype)
-        self.fmt = DeviceEdgeTiles.from_format(
-            build_edge_tiles(graph, tile=tile, e1=e1, e2=e2))
-        self.interpret = default_interpret() if interpret is None else interpret
-        f = self.fmt
-        self._mu_pad = f.pad_node_vector(self.ops.mu)
-        self._c_pad = f.pad_node_vector(self.ops.c)
-        self._inv_w_gather = f.pad_gather_source(self.ops.inv_w)
+        from ..core.engine import make_engine
+        self._engine = make_engine("pallas", graph=graph, activity=activity,
+                                   tile=tile, e1=e1, e2=e2, dtype=dtype,
+                                   interpret=interpret)
+        self.ops = self._engine.ops
+        self.fmt = self._engine.fmt
+        self.interpret = self._engine.interpret
 
-    def run(self, *, tol: float = 1e-9, max_iter: int = 10_000):
-        fmt, ops = self.fmt, self.ops
-        interpret = self.interpret
-        mu_pad, c_pad, inv_w_g = self._mu_pad, self._c_pad, self._inv_w_gather
-        b_norm = ops.b_norm
-
-        @jax.jit
-        def run_loop(s0):
-            def cond(state):
-                _, gap, t = state
-                return (gap > tol) & (t < max_iter)
-
-            def body(state):
-                s, _, t = state
-                s_new, gap = power_step(s, inv_w_g, mu_pad, c_pad, fmt,
-                                        interpret=interpret)
-                return s_new, b_norm * gap, t + 1
-
-            s, gap, t = jax.lax.while_loop(
-                cond, body, (s0, jnp.asarray(jnp.inf, ops.dtype),
-                             jnp.asarray(0, jnp.int32)))
-            return s, gap, t
-
-        s0 = fmt.pad_node_vector(ops.c)
-        s, gap, t = run_loop(s0)
-        s_n = s[0, :fmt.n]
-        psi = ops.psi_epilogue(s_n)
-        from ..core.power_psi import PsiResult
-        return PsiResult(psi=psi, s=s_n, iterations=t, gap=gap,
-                         converged=gap <= tol, matvecs=t + 1)
+    def run(self, *, tol: float = 1e-9, max_iter: int = 10_000,
+            s0=None):
+        return self._engine.run(tol=tol, max_iter=max_iter, s0=s0)

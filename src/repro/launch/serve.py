@@ -18,6 +18,10 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen-len", type=int, default=8)
+    ap.add_argument("--backend", default="reference",
+                    help="ψ solver backend (see repro.core.engine): "
+                         "reference | pallas | distributed")
+    ap.add_argument("--top-k", type=int, default=3)
     args = ap.parse_args()
 
     import jax
@@ -31,15 +35,33 @@ def main() -> None:
         from ..graphs import powerlaw_configuration
         from ..core import heterogeneous, PsiService
         g = powerlaw_configuration(10_000, 70_000, seed=5)
-        svc = PsiService(g, heterogeneous(g.n, seed=6), tol=1e-8)
+        act = heterogeneous(g.n, seed=6)
+        t0 = time.perf_counter()
+        svc = PsiService(g, act, tol=1e-8, backend=args.backend)
+        svc.scores()
+        print(f"[serve] backend={svc.backend} warm in "
+              f"{time.perf_counter() - t0:.2f}s "
+              f"({svc.last_iterations()} iterations)")
+        top, vals = svc.top_k(args.top_k)
+        print(f"[serve] top-{args.top_k}: {top.tolist()}")
         rng = np.random.default_rng(0)
         for r in range(args.requests):
             users = rng.integers(0, g.n, args.batch)
             t0 = time.perf_counter()
-            ranks = svc.rank_of(users)
+            ranks = svc.rank_of(users)        # cached order after req 0
+            scores = svc.scores_batch(users)
             print(f"[serve] req {r}: users={users.tolist()} "
                   f"ranks={ranks.tolist()} "
+                  f"psi={np.round(scores, 8).tolist()} "
                   f"({(time.perf_counter() - t0) * 1e3:.1f} ms)")
+            if r == args.requests // 2:       # live update mid-traffic
+                u = int(users[0])
+                t0 = time.perf_counter()
+                svc.update_activity(np.asarray([u]),
+                                    lam=np.asarray([act.lam[u] * 20]))
+                print(f"[serve] delta update user {u}: re-converged in "
+                      f"{svc.last_iterations()} warm iterations "
+                      f"({(time.perf_counter() - t0) * 1e3:.1f} ms)")
         return
 
     if entry.family == "lm":

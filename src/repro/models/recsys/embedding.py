@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from ...compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["embedding_bag", "sharded_lookup"]
@@ -63,8 +65,7 @@ def sharded_lookup(table: jax.Array, ids: jax.Array, mesh,
         *([None] * ids.ndim))
     out_spec = P(ba, *([None] * ids.ndim)) if ba else P(
         *([None] * (ids.ndim + 1)))
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P("model", None), id_spec),
-        out_specs=out_spec,
-        check_vma=False)(table, ids)
+        out_specs=out_spec)(table, ids)

@@ -28,6 +28,7 @@ import numpy as np
 
 from ..ckpt import checkpoint
 from ..core.distributed import DistributedPsi
+from ..core.incremental import RankingCache
 from ..graphs.partition import partition_2d
 
 __all__ = ["PsiDriver", "DriverReport"]
@@ -42,6 +43,10 @@ class DriverReport:
     slow_chunks: list[int]
     psi: np.ndarray
 
+    def queries(self) -> RankingCache:
+        """Batched query layer over the converged ψ (shared with PsiService)."""
+        return RankingCache(self.psi)
+
 
 class PsiDriver:
     def __init__(self, dist: DistributedPsi, *, ckpt_dir: str | None = None,
@@ -50,6 +55,15 @@ class PsiDriver:
         self.ckpt_dir = ckpt_dir
         self.chunk_iters = chunk_iters
         self.deadline_factor = deadline_factor
+        self._warm_s = None                  # set by remesh(): elastic resume
+
+    @classmethod
+    def from_engine(cls, engine, **kw) -> "PsiDriver":
+        """Build a driver from a prepared ``distributed`` PsiEngine."""
+        if getattr(engine, "dist", None) is None:
+            raise ValueError("engine has no distributed state; "
+                             "use make_engine('distributed', graph=..., ...)")
+        return cls(engine.dist, chunk_iters=engine.chunk_iters, **kw)
 
     def run(self, *, tol: float = 1e-8, max_iter: int = 2000,
             fail_hook: Callable[[int], bool] | None = None) -> DriverReport:
@@ -62,7 +76,11 @@ class PsiDriver:
         dist = self.dist
         run_chunk = dist.make_run(chunk_iters=self.chunk_iters)
         epi = jax.jit(dist.make_epilogue())
-        s = dist.arrays.c_src
+        # consume the elastic-remesh warm vector when present: the re-meshed
+        # job resumes the contraction instead of restarting from c (one-shot —
+        # later runs must resume their own progress, not this stale snapshot)
+        s = dist.arrays.c_src if self._warm_s is None else self._warm_s
+        self._warm_s = None
         it = 0
         chunk_idx = 0
         restarts = 0

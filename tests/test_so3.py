@@ -5,6 +5,8 @@ import math
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dep; see requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.gnn import so3
