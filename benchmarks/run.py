@@ -13,15 +13,17 @@ def main() -> None:
                     help="reduced tolerance sweeps / small graphs")
     ap.add_argument("--only", default=None,
                     choices=[None, "exp1", "exp2", "exp3", "kernels",
-                             "roofline", "engines"])
+                             "roofline", "engines", "trajectory"])
     args = ap.parse_args()
 
     from benchmarks.common import header
     from benchmarks import (engine_parity, exp1_error, exp2_matvecs,
-                            exp3_runtime, kernel_bench, roofline)
+                            exp3_runtime, kernel_bench, roofline, trajectory)
     header()
     if args.only in (None, "engines"):
         engine_parity.run(quick=args.quick)
+    if args.only in (None, "trajectory"):
+        trajectory.run(quick=args.quick)
     if args.only in (None, "exp1"):
         exp1_error.run(quick=args.quick)
     if args.only in (None, "exp2"):

@@ -1,0 +1,143 @@
+"""The persistent benchmark trajectory: ``BENCH_power_psi.json``.
+
+One canonical record per (backend × graph regime): median wall-time,
+iterations and mat-vecs to the target tolerance. Every PR re-runs this and
+*appends* a run to the JSON (keyed by label — re-running the same label
+replaces it), so speedups and regressions are measured, not asserted:
+
+* ``heterogeneous`` / ``homogeneous`` — the paper's float64 ε = 1e-9
+  mat-vec benchmark on a hyper-sparse power-law graph: ``reference`` vs
+  the Aitken-``accelerated`` backend (acceptance: ≥ 20 % fewer mat-vecs on
+  heterogeneous activity).
+* ``hyper_sparse`` / ``clustered`` — the float32 kernel-regime benchmark:
+  ``pallas`` pinned to each regime vs the ``auto`` planner (acceptance:
+  auto within 10 % of the best hand-picked regime on both graphs).
+
+Run via ``python -m benchmarks.run --only trajectory`` (add ``--quick`` for
+the CI smoke sizes).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_power_psi.json")
+
+
+def _run_label() -> str:
+    if os.environ.get("BENCH_LABEL"):
+        return os.environ["BENCH_LABEL"]
+    try:
+        rev = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=os.path.dirname(__file__)).stdout.strip()
+        return rev or "local"
+    except Exception:
+        return "local"
+
+
+def _solve_stats(eng, *, tol: float, iters: int = 5) -> dict:
+    res = eng.run(tol=tol)                    # compile + converge once
+    eng.run(tol=tol)                          # settle caches
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        eng.run(tol=tol)
+        times.append(time.perf_counter() - t0)
+    return dict(wall_s=float(np.median(times)),
+                iterations=int(res.iterations), matvecs=int(res.matvecs),
+                converged=bool(res.converged), gap=float(res.gap))
+
+
+def _append_run(entries: list[dict], json_path: str, quick: bool) -> None:
+    doc = {"schema": 1, "runs": []}
+    if os.path.exists(json_path):
+        try:
+            with open(json_path) as f:
+                doc = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            pass
+    label = _run_label()
+    doc["runs"] = [r for r in doc.get("runs", []) if r.get("label") != label]
+    doc["runs"].append({"label": label, "quick": quick, "entries": entries})
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {len(entries)} entries to {os.path.abspath(json_path)} "
+          f"(label={label})")
+
+
+def run(quick: bool = False, json_path: str = JSON_PATH) -> list[dict]:
+    import jax.numpy as jnp
+
+    from repro.core import heterogeneous, homogeneous, make_engine
+    from repro.graphs import clustered_blocks, powerlaw_configuration
+
+    entries: list[dict] = []
+
+    def record(graph_name, g, backend, eng, *, tol, dtype):
+        stats = _solve_stats(eng, tol=tol)
+        regime = getattr(eng, "regime", None)
+        entries.append(dict(graph=graph_name, backend=backend,
+                            regime=regime, n=g.n, m=g.m, dtype=dtype,
+                            tol=tol, **stats))
+        emit(f"trajectory/{graph_name}/{backend}",
+             stats["wall_s"] * 1e6,
+             f"iters={stats['iterations']};matvecs={stats['matvecs']}"
+             + (f";regime={regime}" if regime else ""))
+        return stats
+
+    # ---- mat-vec trajectory: the paper's float64 ε = 1e-9 sweep -------- #
+    n, m = (3_000, 20_000) if quick else (10_000, 70_000)
+    g = powerlaw_configuration(n, m, seed=17)
+    for regime_name, act in (("heterogeneous", heterogeneous(g.n, seed=18)),
+                             ("homogeneous", homogeneous(g.n))):
+        base = None
+        for backend in ("reference", "accelerated"):
+            eng = make_engine(backend, graph=g, activity=act,
+                              dtype=jnp.float64)
+            stats = record(regime_name, g, backend, eng, tol=1e-9,
+                           dtype="float64")
+            if backend == "reference":
+                base = stats
+            else:
+                saved = 1.0 - stats["matvecs"] / max(1, base["matvecs"])
+                emit(f"trajectory/{regime_name}/matvec_reduction",
+                     saved * 100.0,
+                     f"{base['matvecs']}->{stats['matvecs']}")
+
+    # ---- regime trajectory: pinned pallas regimes vs the auto planner -- #
+    if quick:
+        g_sparse = powerlaw_configuration(1_000, 7_000, seed=17)
+        g_clust = clustered_blocks(512, 16_000, block=128, p_in=1.0, seed=3)
+    else:
+        g_sparse = powerlaw_configuration(2_000, 14_000, seed=17)
+        g_clust = clustered_blocks(1_024, 60_000, block=128, p_in=1.0,
+                                   seed=3)
+    for graph_name, g in (("hyper_sparse", g_sparse),
+                          ("clustered", g_clust)):
+        act = heterogeneous(g.n, seed=18)
+        walls = {}
+        for backend, opts in (
+                ("reference", {}),
+                ("pallas[edge_tile]", dict(regime="edge_tile")),
+                ("pallas[bsr]", dict(regime="bsr")),
+                ("auto", dict(microbench=True))):
+            name = backend.split("[")[0]
+            eng = make_engine(name, graph=g, activity=act, **opts)
+            stats = record(graph_name, g, backend, eng, tol=1e-6,
+                           dtype="float32")
+            walls[backend] = stats["wall_s"]
+        best = min(walls["pallas[edge_tile]"], walls["pallas[bsr]"])
+        emit(f"trajectory/{graph_name}/auto_vs_best",
+             walls["auto"] / best * 100.0,
+             "auto wall as % of best hand-picked regime")
+
+    _append_run(entries, json_path, quick)
+    return entries

@@ -12,27 +12,32 @@ so the remaining tail sums to Δ_t·ρ/(1−ρ):
 
     s* ≈ s_{t+1} + Δ_{t+1} · r/(1 − r),   r = ‖Δ_{t+1}‖₁/‖Δ_t‖₁
 
-Every ``extrapolate_every`` iterations we take this jump, then *verify* it
-with one plain iteration (the gap after a jump is computed against the
-re-iterated point, so the Eq. 19 termination guarantee still holds — the
-jump can only overshoot transiently, never terminate early spuriously).
-Worst case (oscillating ratios, complex spectrum) the jump is rejected by
-the monotonicity guard and the method degrades to plain Power-ψ.
+The loop itself now lives in :func:`repro.core.engine._make_accelerated_loop`
+— an engine-level composition that wraps *any* backend's jitted step, so the
+``accelerated`` registered backend and the ``accelerate=True`` opt-in of the
+``pallas``/``auto`` engines share one implementation (and the whole thing
+stays a single on-device ``lax.while_loop``: no host sync per jump). Every
+jump is verified with a plain iteration whose gap drives termination, so the
+Eq. 19 guarantee holds; a non-improving jump is reverted and disables future
+jumps (degrades to plain Power-ψ), and a stalled ratio triggers the
+Krasnoselskii averaging kick. See the loop builder's docstring for details.
 
 Measured on the DBLP stand-in (float64, benchmarks/exp2): heterogeneous
-45 → 33 mat-vecs (−27%), homogeneous 165 → 85..120 (−27..48%) at ε = 1e-9,
-answers identical to ~1e-15. Precision note: near a dtype's fixed-point
-floor a jump can land in a basin whose *plain* fp32 iteration limit-cycles
-at ‖Δs‖ ≈ 1e-6; request tolerances ≥ ~100·ulp for fp32, or use float64 as
-the paper's ε = 1e-9 sweeps do.
+45 → ~34 mat-vecs (−24..27%), homogeneous 165 → 85..120 (−27..48%) at
+ε = 1e-9, answers identical to ~1e-15. Precision note: near a dtype's
+fixed-point floor a jump can land in a basin whose *plain* fp32 iteration
+limit-cycles at ‖Δs‖ ≈ 1e-6; request tolerances ≥ ~100·ulp for fp32, or use
+float64 as the paper's ε = 1e-9 sweeps do.
+
+This module keeps the historical functional entry point; prefer
+``make_engine("accelerated", graph=..., activity=...)`` in new code.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .operators import PsiOperators
-from .power_psi import PsiResult, make_power_psi_step
+from .power_psi import PsiResult
 
 __all__ = ["power_psi_accelerated"]
 
@@ -41,59 +46,23 @@ def power_psi_accelerated(ops: PsiOperators, *, tol: float = 1e-9,
                           max_iter: int = 10_000,
                           extrapolate_every: int = 8,
                           use_b_norm: bool = True) -> PsiResult:
-    """Alg. 2 with periodic Aitken extrapolation (beyond-paper)."""
-    step = make_power_psi_step(ops)
+    """Alg. 2 with periodic Aitken extrapolation (beyond-paper).
+
+    ``iterations`` / ``matvecs`` count mat-vecs actually consumed (each
+    verification step included) — the honest currency for an extrapolated
+    loop.
+    """
+    from .engine import _make_accelerated_loop
+
+    def one_step(a, s):
+        s_new = a.mu * a.push(s) + a.c
+        return s_new, jnp.sum(jnp.abs(s_new - s))
+
+    loop = _make_accelerated_loop(one_step,
+                                  extrapolate_every=extrapolate_every)
     scale = ops.b_norm if use_b_norm else jnp.asarray(1.0, ops.dtype)
-    k = extrapolate_every
-
-    @jax.jit
-    def run(s0):
-        def cond(state):
-            _, _, gap, t, _ = state
-            return (gap > tol) & (t < max_iter)
-
-        def body(state):
-            s, prev_delta_norm, _, t, enabled = state
-            s1 = step(s)
-            delta = s1 - s
-            dn = jnp.sum(jnp.abs(delta))
-            gap_plain = scale * dn
-            r = dn / jnp.maximum(prev_delta_norm, 1e-30)
-            # jump only in the contraction regime AND while still far from
-            # tolerance — near the floating-point fixed point the jump's
-            # perturbation would keep the verification gap from reaching 0
-            far = gap_plain > 100.0 * tol
-            do_jump = (jnp.asarray(t % k == k - 1)) & (r < 0.999) & \
-                (r > 0) & far & enabled
-            jump = jnp.where(do_jump, r / (1.0 - r), 0.0)
-            s_x = s1 + delta * jump
-            # verification iteration after a jump keeps Eq. 19 semantics
-            s_ver = step(s_x)
-            gap_jump = scale * jnp.sum(jnp.abs(s_ver - s_x))
-            # monotonic safeguard: a jump that does not reduce the gap is
-            # reverted and disables all future jumps (degrades to plain
-            # Power-ψ with at most one wasted mat-vec) — handles complex
-            # spectra and the floating-point fixed-point floor
-            bad = do_jump & (gap_jump >= gap_plain)
-            take_jump = do_jump & ~bad
-            s2 = jnp.where(take_jump, s_ver, s1)
-            gap = jnp.where(take_jump, gap_jump, gap_plain)
-            enabled = enabled & ~bad
-            # Krasnoselskii kick: a non-shrinking plain step (r ≈ 1) means a
-            # floating-point period-2 cycle — averaging the pair kills the
-            # oscillating component and is always safe for a contraction
-            stall = (~do_jump) & (r > 0.999) & jnp.isfinite(r)
-            s2 = jnp.where(stall, 0.5 * (s + s1), s2)
-            t_next = t + 1 + do_jump.astype(jnp.int32)
-            return s2, dn, gap, t_next, enabled
-
-        s, _, gap, t, _ = jax.lax.while_loop(
-            cond, body,
-            (s0, jnp.asarray(jnp.inf, ops.dtype),
-             jnp.asarray(jnp.inf, ops.dtype), jnp.asarray(0, jnp.int32),
-             jnp.asarray(True)))
-        return ops.psi_epilogue(s), s, gap, t
-
-    psi, s, gap, t = run(ops.c)
-    return PsiResult(psi=psi, s=s, iterations=t, gap=gap,
+    s, gap, t = loop(ops, ops.c, scale,
+                     jnp.asarray(tol, ops.dtype),
+                     jnp.asarray(max_iter, jnp.int32))
+    return PsiResult(psi=ops.psi_epilogue(s), s=s, iterations=t, gap=gap,
                      converged=gap <= tol, matvecs=t + 1)

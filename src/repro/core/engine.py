@@ -1,4 +1,4 @@
-"""Unified Power-ψ solver abstraction: one protocol, three backends.
+"""Unified Power-ψ solver abstraction: one protocol, five backends.
 
 Before this module the repo had four disjoint solver loops (``power_psi``,
 ``kernels.ops.PsiKernelEngine``, ``DistributedPsi.run_to_convergence`` and the
@@ -15,11 +15,23 @@ Backends are registered by name and constructed through
 
   * ``reference``   — the edge-form ``segment_sum`` iteration of
     :mod:`repro.core.power_psi` (works everywhere, float64-capable).
-  * ``pallas``      — the fused TPU ``power_step`` Pallas kernel
-    (interpret mode off-TPU); absorbs the old ``PsiKernelEngine``.
+  * ``pallas``      — the TPU Pallas kernels (interpret mode off-TPU) in one
+    of two execution regimes: the fused edge-tile ``power_step`` kernel
+    (hyper-sparse graphs) or the BSR/MXU ``bsr_spmv`` kernel (clustered
+    graphs); pick with ``regime=`` or hand over a
+    :class:`~repro.kernels.autotune.RegimePlan`.
+  * ``auto``        — a ``pallas`` engine whose regime and tile parameters
+    are chosen per graph by the :mod:`repro.kernels.autotune` planner
+    (measured-occupancy cost model, optional one-shot micro-benchmark,
+    process-level plan cache).
+  * ``accelerated`` — the ``reference`` iteration wrapped in the on-device
+    Aitken extrapolation loop (see :func:`_make_accelerated_loop`); any
+    other backend opts in with ``accelerate=True``.
   * ``distributed`` — the 2-D block-cyclic ``shard_map`` schedule of
     :class:`repro.core.distributed.DistributedPsi`, driven in host-side
-    chunks exactly like ``runtime/psi_driver.py``.
+    chunks exactly like ``runtime/psi_driver.py``; ``accelerate=True``
+    applies the Aitken jump at chunk granularity
+    (:class:`ChunkExtrapolator`).
 
 All backends share one :class:`ConvergenceCriterion` — ε on ‖B‖·‖Δs‖ per
 Eq. 19 — and report interchangeable :class:`~repro.core.power_psi.PsiResult`
@@ -52,7 +64,8 @@ from .operators import HostOperators, PsiOperators
 from .power_psi import _NORMS, PsiResult
 
 __all__ = ["ConvergenceCriterion", "EngineState", "PsiEngine",
-           "ReferenceEngine", "PallasEngine", "DistributedEngine",
+           "ReferenceEngine", "PallasEngine", "AutoEngine",
+           "AcceleratedEngine", "DistributedEngine", "ChunkExtrapolator",
            "make_engine", "register_backend", "available_backends"]
 
 
@@ -105,14 +118,32 @@ class EngineState:
 # Protocol + registry
 # --------------------------------------------------------------------- #
 class PsiEngine(abc.ABC):
-    """One (graph, activity) pair's solver; see module docstring."""
+    """One (graph, activity) pair's solver; see module docstring.
+
+    Loop-shaping options shared by every backend:
+
+    * ``accelerate`` — wrap the backend's step in the on-device Aitken
+      extrapolation loop (``distributed`` applies it at chunk granularity).
+    * ``extrapolate_every`` — target plain iterations between jump attempts.
+    * ``check_every`` — evaluate the convergence gap every k-th iteration;
+      the k−1 intermediate gap reductions are dead code XLA eliminates, so
+      the O(N) norm is amortized over k steps. ``iterations`` then lands on
+      a multiple of k (overshoot < k, never undershoot). Ignored by
+      ``distributed`` (its cadence is ``chunk_iters``) and by accelerated
+      loops (their verify-after-jump pairing fixes the cadence at 2).
+    """
 
     name: str = "abstract"
 
     def __init__(self, *, dtype=jnp.float32,
-                 criterion: ConvergenceCriterion | None = None):
+                 criterion: ConvergenceCriterion | None = None,
+                 accelerate: bool = False, extrapolate_every: int = 8,
+                 check_every: int = 1):
         self.dtype = dtype
         self.criterion = criterion or ConvergenceCriterion()
+        self.accelerate = bool(accelerate)
+        self.extrapolate_every = int(extrapolate_every)
+        self.check_every = max(1, int(check_every))
         self._graph: Graph | None = None
         self._graph_stale = False
         self.host: HostOperators | None = None
@@ -158,6 +189,17 @@ class PsiEngine(abc.ABC):
         self._graph_stale = False
         self.host = HostOperators.from_graph(graph, activity)
         self.ops = self.host.to_device(self.dtype)
+
+    def _install_loops(self, one_step) -> None:
+        """Build ``self._loop`` / ``self._step_jit`` from the backend's
+        ``one_step(args, s) -> (s_new, raw_gap)`` closure, honoring the
+        ``accelerate`` / ``check_every`` loop-shaping options."""
+        if self.accelerate:
+            self._loop = _make_accelerated_loop(
+                one_step, extrapolate_every=self.extrapolate_every)
+        else:
+            self._loop = _make_loop(one_step, check_every=self.check_every)
+        self._step_jit = jax.jit(one_step)
 
     def _scale(self) -> jax.Array:
         return (self.ops.b_norm if self.criterion.use_b_norm
@@ -222,13 +264,22 @@ def make_engine(backend: str = "reference", *, graph: Graph | None = None,
 
 
 # --------------------------------------------------------------------- #
-# Shared while-loop builder — operators travel as pytree *arguments* so a
+# Shared while-loop builders — operators travel as pytree *arguments* so a
 # delta patch never retraces: the jit cache keys on array shapes only
 # (activity patches and sentinel-slot edge inserts preserve shapes).
 # --------------------------------------------------------------------- #
-def _make_loop(step_with_gap):
+def _make_loop(step_with_gap, *, check_every: int = 1):
     """``step_with_gap(args, s) -> (s_new, raw_gap)`` →
-    jitted ``loop(args, s0, scale, tol, max_iter) -> (s, gap, t)``."""
+    jitted ``loop(args, s0, scale, tol, max_iter) -> (s, gap, t)``.
+
+    With ``check_every=k`` each while-loop body advances k iterations and
+    only the k-th raw gap feeds the termination test — the k−1 discarded
+    gaps are dead code, so backends whose norm is a separate O(N) reduce
+    (``reference``, the BSR regime) pay for it once per k steps. ``t``
+    advances in multiples of k (it can overshoot the minimal iteration
+    count by < k, never undershoot the tolerance).
+    """
+    k = max(1, int(check_every))
 
     @jax.jit
     def loop(args, s0, scale, tol, max_iter):
@@ -238,14 +289,126 @@ def _make_loop(step_with_gap):
 
         def body(st):
             s, _, t = st
+            for _ in range(k - 1):          # unrolled; gaps DCE'd by XLA
+                s, _ = step_with_gap(args, s)
             s_new, raw = step_with_gap(args, s)
-            return s_new, scale * raw, t + 1
+            return s_new, scale * raw, t + k
 
         return jax.lax.while_loop(
             cond, body, (s0, jnp.asarray(jnp.inf, s0.dtype),
                          jnp.asarray(0, jnp.int32)))
 
     return loop
+
+
+def _make_accelerated_loop(step_with_gap, *, extrapolate_every: int = 8):
+    """Aitken / geometric-series extrapolation around *any* backend step.
+
+    Same calling convention as :func:`_make_loop`. Each while-loop body
+    consumes exactly two mat-vecs and advances either two plain iterations
+    or one extrapolated jump plus its verification step:
+
+        s₁ = step(s);  Δ = s₁ − s;  r = ‖Δ_t‖/‖Δ_{t−1}‖
+        s_x = s₁ + Δ · r/(1−r)      every ~extrapolate_every iterations,
+                                    while contracting (0 < r < 0.999) and
+                                    far from tolerance (gap > 100·tol)
+        s₂ = step(s_x)              # verification (or second plain step)
+
+    The termination gap is *always* ``scale·‖s₂ − s_x‖`` — measured across
+    a genuine plain iteration — so the Eq. 19 guarantee survives every
+    jump; the whole loop is one ``lax.while_loop`` on device (no host sync
+    per jump). A jump that fails to shrink the gap is reverted and disables
+    all future jumps (degrades to plain Power-ψ at one wasted mat-vec); a
+    stalled ratio (r ≈ 1, a floating-point period-2 cycle) triggers a
+    Krasnoselskii averaging kick, which is always safe for a contraction.
+
+    The returned ``t`` counts mat-vecs actually consumed. Precision note:
+    near a dtype's fixed-point floor a jump can land in a basin whose plain
+    fp32 iteration limit-cycles at ‖Δs‖ ≈ 1e-6; request tolerances
+    ≥ ~100·ulp for fp32, or run float64 as the paper's ε = 1e-9 sweeps do.
+    """
+    kb = max(1, int(extrapolate_every) // 2)  # loop bodies between attempts
+
+    @jax.jit
+    def loop(args, s0, scale, tol, max_iter):
+        def cond(st):
+            _, _, gap, t, _, _ = st
+            return (gap > tol) & (t < max_iter)
+
+        def body(st):
+            s, prev_dn, _, t, j, enabled = st
+            s1, raw1 = step_with_gap(args, s)
+            delta = s1 - s
+            gap_plain = scale * raw1
+            r = raw1 / jnp.maximum(prev_dn, 1e-30)
+            far = gap_plain > 100.0 * tol
+            do_jump = ((j % kb == kb - 1) & (r > 0.0) & (r < 0.999)
+                       & far & enabled)
+            jump = jnp.where(do_jump, r / (1.0 - r), 0.0)
+            s_x = s1 + delta * jump           # == s₁ when not jumping
+            s2, raw2 = step_with_gap(args, s_x)
+            gap_ver = scale * raw2
+            bad = do_jump & (gap_ver >= gap_plain)
+            enabled = enabled & ~bad
+            s_next = jnp.where(bad, s1, s2)
+            gap = jnp.where(bad, gap_plain, gap_ver)
+            dn_next = jnp.where(bad, raw1, raw2)
+            stall = (~do_jump) & (r > 0.999) & jnp.isfinite(r)
+            s_next = jnp.where(stall, 0.5 * (s_x + s2), s_next)
+            return s_next, dn_next, gap, t + 2, j + 1, enabled
+
+        s, _, gap, t, _, _ = jax.lax.while_loop(
+            cond, body,
+            (s0, jnp.asarray(jnp.inf, s0.dtype),
+             jnp.asarray(jnp.inf, s0.dtype), jnp.asarray(0, jnp.int32),
+             jnp.asarray(0, jnp.int32), jnp.asarray(True)))
+        return s, gap, t
+
+    return loop
+
+
+class ChunkExtrapolator:
+    """Host-side Aitken jump between fixed-shape device chunks.
+
+    The ``distributed`` backend (and ``runtime/psi_driver.py``) evaluate
+    convergence between ``chunk_iters``-step device scans; this helper
+    extrapolates across chunk *endpoints*: the per-chunk contraction ratio
+    is ρ^chunk_iters, so the remaining tail after chunk t sums to
+    Δ_t · r/(1−r) exactly as in the per-iteration loop. Eq. 19 survives
+    because the termination gap is always produced by the *next* chunk's
+    plain steps (≥ 1 plain iteration after any jump). A chunk whose gap
+    fails to shrink disables all future jumps — no revert is needed since
+    the chunk's plain steps already re-contracted the iterate.
+    """
+
+    def __init__(self, tol: float, *, guard: float = 100.0):
+        self.tol = tol
+        self.guard = guard
+        self.reset()
+
+    def reset(self) -> None:
+        """Forget history (e.g. after a checkpoint restore)."""
+        self._prev_dn: float | None = None
+        self._gap_prev = float("inf")
+        self.enabled = True
+        self.jumps = 0
+
+    def advance(self, s_in, s_out, gap: float):
+        """Map a finished chunk (input → output, scaled gap) to the next
+        chunk's start vector, possibly extrapolated."""
+        if not self.enabled:
+            return s_out
+        if gap >= self._gap_prev:             # jump/stall did not help
+            self.enabled = False
+            return s_out
+        self._gap_prev = gap
+        dn = float(jnp.sum(jnp.abs(s_out - s_in)))
+        r = 0.0 if not self._prev_dn else dn / self._prev_dn
+        self._prev_dn = dn
+        if 0.0 < r < 0.999 and gap > self.guard * self.tol:
+            self.jumps += 1
+            return s_out + (s_out - s_in) * (r / (1.0 - r))
+        return s_out
 
 
 # --------------------------------------------------------------------- #
@@ -263,8 +426,7 @@ class ReferenceEngine(PsiEngine):
             s_new = ops.mu * ops.push(s) + ops.c
             return s_new, nrm(s_new - s)
 
-        self._loop = _make_loop(one_step)
-        self._step_jit = jax.jit(one_step)
+        self._install_loops(one_step)
 
     def prepare(self, graph: Graph, activity: Activity) -> EngineState:
         self._base_prepare(graph, activity)
@@ -290,49 +452,128 @@ class ReferenceEngine(PsiEngine):
         return True
 
 
+@register_backend("accelerated")
+class AcceleratedEngine(ReferenceEngine):
+    """Aitken-extrapolated ``reference`` iteration — the ROADMAP's fourth
+    registered backend. Identical math to the historical
+    ``core.accelerated.power_psi_accelerated`` entry point, now expressed
+    as the engine-level loop composition every backend can opt into
+    (``make_engine("pallas", accelerate=True)``, …).
+
+    ``iterations`` / ``matvecs`` count mat-vecs actually consumed — the
+    honest currency an extrapolated loop is judged in.
+    """
+
+    def __init__(self, **kw):
+        kw["accelerate"] = True
+        super().__init__(**kw)
+
+
 # --------------------------------------------------------------------- #
-# pallas — fused TPU power_step kernel (absorbs PsiKernelEngine)
+# pallas — fused TPU kernels in two execution regimes (absorbs
+# PsiKernelEngine; BSR promoted from ablation to first-class regime)
 # --------------------------------------------------------------------- #
 @register_backend("pallas")
 class PallasEngine(PsiEngine):
-    """Alg. 2 driven by the fused Pallas edge-tile kernel.
+    """Alg. 2 driven by the Pallas TPU kernels.
 
-    The kernel computes the raw L1 gap on-chip, so the criterion's norm must
-    be ``l1`` (the paper's choice). Activity patches only refresh the padded
-    node vectors; edge patches are placed into free sentinel slots of the
-    edge-tile format and fall back to an edge-tile rebuild (never a full
-    operator rebuild) when a tile overflows.
+    Two execution regimes share the engine (see kernels/formats.py and
+    docs/AUTOTUNE.md):
+
+    * ``edge_tile`` — the fused ``power_step`` kernel: dst-sorted edge
+      blocks scatter into node tiles, the gap is computed on-chip. Native
+      state layout is the padded ``[1, n_pad]`` node vector.
+    * ``bsr``       — the ``bsr_spmv`` dense-tile MXU kernel with the μ/c
+      epilogue and L1 gap composed around it by XLA. Native layout is the
+      node-order ``f[n]`` vector.
+
+    Both regimes compute the gap in ``l1`` (the paper's choice), so the
+    criterion's norm must be ``l1``. Activity patches refresh only node
+    vectors; edge patches go into free sentinel slots (edge-tile, via an
+    O(Δ) per-tile free-slot cursor) or existing dense tiles (BSR) and fall
+    back to a regime-format rebuild — never a full operator rebuild — when
+    a tile/block overflows.
     """
 
-    def __init__(self, *, tile: int = 256, e1: int = 8, e2: int = 128,
-                 interpret: bool | None = None, **kw):
+    def __init__(self, *, regime: str = "edge_tile", tile: int = 256,
+                 e1: int = 8, e2: int = 128, ts: int = 128, td: int = 128,
+                 interpret: bool | None = None, plan=None, **kw):
         super().__init__(**kw)
         if self.criterion.norm != "l1":
-            raise ValueError("pallas backend computes the gap on-chip in l1; "
+            raise ValueError("pallas backend computes the gap in l1; "
                              f"got norm={self.criterion.norm!r}")
-        from ..kernels.ops import default_interpret, power_step
-        self.tile, self.e1, self.e2 = tile, e1, e2
+        from ..kernels.ops import default_interpret
         self.interpret = (default_interpret() if interpret is None
                           else interpret)
+        self.tile, self.e1, self.e2 = tile, e1, e2
+        self.ts, self.td = ts, td
+        if plan is not None:
+            self._apply_plan(plan)
+        else:
+            self._set_regime(regime)
+
+    # -- regime plumbing ------------------------------------------------ #
+    def _apply_plan(self, plan) -> None:
+        """Adopt a :class:`~repro.kernels.autotune.RegimePlan`."""
+        if plan.regime == "edge_tile":
+            self.tile, self.e1, self.e2 = plan.tile, plan.e1, plan.e2
+        else:
+            self.ts, self.td = plan.ts, plan.td
+        self._set_regime(plan.regime)
+
+    def _set_regime(self, regime: str) -> None:
+        if regime not in ("edge_tile", "bsr"):
+            raise ValueError(f"unknown pallas regime {regime!r}; "
+                             "choose edge_tile or bsr")
+        self.regime = regime
         interp = self.interpret
+        if regime == "edge_tile":
+            from ..kernels.ops import power_step
 
-        def one_step(args, s):
-            fmt, inv_w_g, mu_pad, c_pad = args
-            return power_step(s, inv_w_g, mu_pad, c_pad, fmt,
-                              interpret=interp)
+            def one_step(args, s):
+                fmt, inv_w_g, mu_pad, c_pad = args
+                return power_step(s, inv_w_g, mu_pad, c_pad, fmt,
+                                  interpret=interp)
+        else:
+            from ..kernels.ops import bsr_spmv
 
-        self._loop = _make_loop(one_step)
-        self._step_jit = jax.jit(one_step)
+            def one_step(args, s):
+                fmt, inv_w, mu, c = args
+                s_new = mu * bsr_spmv(s * inv_w, fmt, interpret=interp) + c
+                return s_new, jnp.sum(jnp.abs(s_new - s))
 
+        self._install_loops(one_step)
+
+    def _build_format(self, graph: Graph) -> None:
+        if self.regime == "edge_tile":
+            from ..kernels.formats import build_edge_tiles
+            from ..kernels.ops import DeviceEdgeTiles
+            self.fmt_host = build_edge_tiles(graph, tile=self.tile,
+                                             e1=self.e1, e2=self.e2)
+            self.fmt = DeviceEdgeTiles.from_format(self.fmt_host)
+            self._rebuild_tile_cursor()
+            self._refresh_padded()
+        else:
+            from ..kernels.formats import build_bsr
+            from ..kernels.ops import DeviceBsr
+            self.fmt_host = build_bsr(
+                graph, ts=self.ts, td=self.td,
+                dtype=np.dtype(jnp.dtype(self.dtype).name))
+            self.fmt = DeviceBsr.from_format(self.fmt_host)
+            self._rebuild_bsr_block_map()
+
+    def _to_native(self, v: jax.Array) -> jax.Array:
+        return (self.fmt.pad_node_vector(v) if self.regime == "edge_tile"
+                else v)
+
+    def _from_native(self, s: jax.Array) -> jax.Array:
+        return s[0, :self.fmt.n] if self.regime == "edge_tile" else s
+
+    # -- lifecycle ------------------------------------------------------ #
     def prepare(self, graph: Graph, activity: Activity) -> EngineState:
-        from ..kernels.formats import build_edge_tiles
-        from ..kernels.ops import DeviceEdgeTiles
         self._base_prepare(graph, activity)
-        self.fmt_host = build_edge_tiles(graph, tile=self.tile, e1=self.e1,
-                                         e2=self.e2)
-        self.fmt = DeviceEdgeTiles.from_format(self.fmt_host)
-        self._refresh_padded()
-        return EngineState(s=self.fmt.pad_node_vector(self.ops.c))
+        self._build_format(graph)
+        return EngineState(s=self._to_native(self.ops.c))
 
     def _refresh_padded(self) -> None:
         f = self.fmt
@@ -341,76 +582,166 @@ class PallasEngine(PsiEngine):
         self._inv_w_gather = f.pad_gather_source(self.ops.inv_w)
 
     def _step_args(self):
-        return (self.fmt, self._inv_w_gather, self._mu_pad, self._c_pad)
+        if self.regime == "edge_tile":
+            return (self.fmt, self._inv_w_gather, self._mu_pad, self._c_pad)
+        return (self.fmt, self.ops.inv_w, self.ops.mu, self.ops.c)
 
     def run(self, *, tol=None, max_iter=None, s0=None) -> PsiResult:
         tol, max_iter = self.criterion.resolve(tol, max_iter)
-        s_init = self.fmt.pad_node_vector(self._s0_node_order(s0))
+        s_init = self._to_native(self._s0_node_order(s0))
         s, gap, t = self._loop(self._step_args(), s_init, self._scale(),
                                jnp.asarray(tol, self.ops.dtype),
                                jnp.asarray(max_iter, jnp.int32))
-        s_n = s[0, :self.fmt.n]
+        s_n = self._from_native(s)
         return self._result(self.ops.psi_epilogue(s_n), s_n, gap, t, tol)
 
     # -- delta rebuilds ------------------------------------------------- #
     def patch_activity(self, users, lam=None, mu=None) -> bool:
         self.host.patch_activity(users, lam=lam, mu=mu)
         self.ops = self.host.refresh_node_arrays(self.ops, self.dtype)
-        self._refresh_padded()
+        if self.regime == "edge_tile":
+            self._refresh_padded()
         return True
 
     def patch_edges(self, src, dst) -> bool:
-        from ..kernels.formats import build_edge_tiles
-        from ..kernels.ops import DeviceEdgeTiles
         src, dst = self.host.patch_edges(src, dst)
         self._graph_stale = True
+        if self.regime == "edge_tile":
+            self._patch_edges_edge_tile(src, dst)
+        else:
+            self._patch_edges_bsr(src, dst)
+        self.ops = self.host.to_device(self.dtype)   # edge arrays grew
+        if self.regime == "edge_tile":
+            self._refresh_padded()
+        return True
+
+    # -- edge-tile regime: O(Δ) sentinel-slot inserts -------------------- #
+    def _rebuild_tile_cursor(self) -> None:
+        """Per-tile free-slot cursor, computed once per format build.
+
+        ``build_edge_tiles`` fills each node tile's block span contiguously
+        from its first slot, and cursor inserts preserve that invariant —
+        so a tile's free sentinel slots are exactly the tail of its span
+        and placing an edge is O(1): no per-edge scan over blocks/slots.
+        """
+        f = self.fmt_host
+        used_per_block = (f.src_idx.reshape(f.num_blocks, -1)
+                          != f.n).sum(axis=1)
+        self._tile_first_block = np.searchsorted(
+            f.block_tile, np.arange(f.num_tiles))
+        blocks_per_tile = np.bincount(f.block_tile, minlength=f.num_tiles)
+        self._tile_capacity = blocks_per_tile.astype(np.int64) * f.eblk
+        self._tile_used = np.bincount(
+            f.block_tile, weights=used_per_block,
+            minlength=f.num_tiles).astype(np.int64)
+
+    def _insert_into_tiles(self, src: np.ndarray, dst: np.ndarray):
+        """Place new edges into free (sentinel) slots of their dst tile.
+
+        O(Δ) total via the per-tile cursor. Mutates the host format in
+        place and returns the placed ``(block, flat_slot, src_id,
+        dst_local)`` tuples, or ``None`` when any tile would overflow (the
+        caller rebuilds the format; nothing is mutated in that case)."""
+        f = self.fmt_host
+        tile, eblk = f.tile, f.eblk
+        tiles_of = np.asarray(dst, np.int64) // tile
+        need = np.bincount(tiles_of, minlength=f.num_tiles)
+        if np.any(self._tile_used + need > self._tile_capacity):
+            return None
+        flat_src = f.src_idx.reshape(f.num_blocks, -1)
+        flat_dstl = f.dst_local.reshape(f.num_blocks, -1)
+        placed = []
+        for s, d, t in zip(src, dst, tiles_of):
+            t = int(t)
+            u = int(self._tile_used[t])
+            b = int(self._tile_first_block[t]) + u // eblk
+            slot = u % eblk
+            d_loc = int(d) - t * tile
+            flat_src[b, slot] = s
+            flat_dstl[b, slot] = d_loc
+            placed.append((b, slot, int(s), d_loc))
+            self._tile_used[t] = u + 1
+        return placed
+
+    def _patch_edges_edge_tile(self, src: np.ndarray,
+                               dst: np.ndarray) -> None:
         slots = self._insert_into_tiles(src, dst)
         if slots is None:
             # a tile ran out of sentinel slots — rebuild the edge-tile
             # format only (the operator arrays stay incrementally patched;
             # the shape change means the next run() retraces once)
-            self.fmt_host = build_edge_tiles(self.graph, tile=self.tile,
-                                             e1=self.e1, e2=self.e2)
-            self.fmt = DeviceEdgeTiles.from_format(self.fmt_host)
+            self._build_format(self.graph)
         elif slots:
-            # fast path: scatter the few new slots into the device-resident
-            # format instead of re-uploading all M edges
-            src_idx, dst_local = self.fmt.src_idx, self.fmt.dst_local
-            for b, slot, s_id, d_loc in slots:
-                i, j = divmod(slot, self.e2)
-                src_idx = src_idx.at[b, i, j].set(s_id)
-                dst_local = dst_local.at[b, i, j].set(d_loc)
+            # fast path: one batched scatter of the new slots into the
+            # device-resident format instead of re-uploading all M edges
+            b, slot, s_id, d_loc = (np.asarray(x) for x in zip(*slots))
+            i, j = np.divmod(slot, self.e2)
+            src_idx = self.fmt.src_idx.at[b, i, j].set(
+                jnp.asarray(s_id, jnp.int32))
+            dst_local = self.fmt.dst_local.at[b, i, j].set(
+                jnp.asarray(d_loc, jnp.int32))
             self.fmt = dataclasses.replace(self.fmt, src_idx=src_idx,
                                            dst_local=dst_local)
-        self.ops = self.host.to_device(self.dtype)   # edge arrays grew
-        self._refresh_padded()
-        return True
 
-    def _insert_into_tiles(self, src: np.ndarray, dst: np.ndarray):
-        """Place new edges into free (sentinel) slots of their dst tile.
-
-        Mutates the host format in place and returns the placed
-        ``(block, flat_slot, src_id, dst_local)`` tuples, or ``None`` when
-        some tile has no free slot left (caller rebuilds the format)."""
+    # -- BSR regime: dense-tile increments ------------------------------ #
+    def _rebuild_bsr_block_map(self) -> None:
         f = self.fmt_host
-        n, tile = f.n, f.tile
-        flat_src = f.src_idx.reshape(f.num_blocks, -1)
-        flat_dstl = f.dst_local.reshape(f.num_blocks, -1)
-        placed = []
-        for s, d in zip(src, dst):
-            t = int(d) // tile
-            blocks = np.nonzero(f.block_tile == t)[0]
-            for b in blocks:
-                free = np.nonzero(flat_src[b] == n)[0]
-                if free.size:
-                    slot = int(free[0])
-                    flat_src[b, slot] = s
-                    flat_dstl[b, slot] = int(d) - t * tile
-                    placed.append((int(b), slot, int(s), int(d) - t * tile))
-                    break
-            else:
-                return None
-        return placed
+        self._bsr_blocks = {
+            (int(st), int(dt)): b
+            for b, (st, dt) in enumerate(zip(f.src_tile, f.dst_tile))}
+
+    def _patch_edges_bsr(self, src: np.ndarray, dst: np.ndarray) -> None:
+        if src.size == 0:
+            return
+        f = self.fmt_host
+        st = np.asarray(src, np.int64) // f.ts
+        dt = np.asarray(dst, np.int64) // f.td
+        if any((int(a), int(b)) not in self._bsr_blocks
+               for a, b in zip(st, dt)):
+            # a brand-new (src_tile, dst_tile) block — rebuild the BSR
+            # format (shape change → one retrace), never the operators
+            self._build_format(self.graph)
+            return
+        b = np.asarray([self._bsr_blocks[(int(a), int(c))]
+                        for a, c in zip(st, dt)])
+        r = np.asarray(src, np.int64) % f.ts
+        c = np.asarray(dst, np.int64) % f.td
+        np.add.at(f.tiles, (b, r, c), 1.0)
+        self.fmt = dataclasses.replace(
+            self.fmt, tiles=self.fmt.tiles.at[b, r, c].add(1.0))
+
+
+@register_backend("auto")
+class AutoEngine(PallasEngine):
+    """``pallas`` with the regime chosen per graph by the autotuner.
+
+    ``prepare`` asks :func:`repro.kernels.autotune.plan_regime` for the
+    cheapest execution plan (cost model by default; ``microbench=True``
+    times one step of every candidate). Plans are memoized in
+    the process-level :data:`~repro.kernels.autotune.PLAN_CACHE` keyed by
+    graph *structure*, so ``patch_activity`` / warm re-``prepare`` cycles
+    never re-plan, and the compiled solver loop is only rebuilt when the
+    plan actually changes.
+    """
+
+    def __init__(self, *, microbench: bool = False, plan_cache=None, **kw):
+        kw.pop("regime", None)          # the planner owns the regime
+        self.microbench = bool(microbench)
+        self._plan_cache = plan_cache
+        self.plan = None
+        super().__init__(**kw)
+
+    def prepare(self, graph: Graph, activity: Activity) -> EngineState:
+        from ..kernels import autotune
+        cache = (autotune.PLAN_CACHE if self._plan_cache is None
+                 else self._plan_cache)
+        plan = autotune.plan_regime(
+            graph, microbench=self.microbench, dtype=self.dtype,
+            interpret=self.interpret, cache=cache)
+        if plan != self.plan:
+            self.plan = plan
+            self._apply_plan(plan)
+        return super().prepare(graph, activity)
 
 
 # --------------------------------------------------------------------- #
@@ -426,6 +757,13 @@ class DistributedEngine(PsiEngine):
     ``runtime/psi_driver.py`` schedule. The gap norm must be ``l1`` (what the
     sharded step psums). ``s`` is converted to/from node order at the API
     boundary so results interchange with the other backends.
+
+    ``accelerate=True`` applies the Aitken jump at *chunk* granularity via
+    :class:`ChunkExtrapolator` (the on-device per-iteration loop would break
+    the fixed-shape scan contract). ``patch_edges`` is a block-local O(Δ)
+    insert into the node-stable 2-D partition; it returns ``False`` only on
+    genuine block overflow (``e_max`` exceeded), in which case the caller's
+    full re-``prepare`` re-partitions.
     """
 
     def __init__(self, *, mesh=None, chunk_iters: int = 16, **kw):
@@ -469,11 +807,13 @@ class DistributedEngine(PsiEngine):
                     self.mesh,
                     jax.sharding.PartitionSpec(self.dist.src_axes, None)))
         scale = self.criterion.scale(self.host.b_norm)
+        extrap = ChunkExtrapolator(tol) if self.accelerate else None
         it, gap = 0, float("inf")
         while it < max_iter and gap > tol:
-            s, gap_dev = self._run_chunk(s, self.dist.arrays)
+            s_new, gap_dev = self._run_chunk(s, self.dist.arrays)
             it += self.chunk_iters
             gap = scale * float(gap_dev)
+            s = extrap.advance(s, s_new, gap) if extrap else s_new
         psi_piece = self._epi(s, self.dist.arrays)
         psi = part.from_src_layout(
             np.asarray(psi_piece).reshape(part.d, -1))
@@ -487,4 +827,64 @@ class DistributedEngine(PsiEngine):
         self.host.patch_activity(users, lam=lam, mu=mu)
         self.ops = self.host.refresh_node_arrays(self.ops, self.dtype)
         self.dist.arrays = self.dist.build_arrays(self.graph, self.activity)
+        return True
+
+    def patch_edges(self, src, dst) -> bool:
+        """Block-local edge insert into the node-stable 2-D partition.
+
+        The node → (row, col) ownership map depends only on (n, d, mo, q),
+        so a new edge lands in exactly one block; it is merged dst-sorted
+        into that block's host slice (sentinels stay at the tail) and the
+        touched block rows + 1/w entries are scattered into the device
+        arrays — no re-partition, no O(M) rebuild. Returns ``False`` only
+        when a block genuinely overflows ``e_max``.
+        """
+        p = self.dist.part
+        nc, q = p.nc, p.q
+        src_k, dst_k = self.host.patch_edges(src, dst)
+        self._graph_stale = True
+        if src_k.size == 0:
+            return True
+        s64 = src_k.astype(np.int64)
+        d64 = dst_k.astype(np.int64)
+        c_of_src = s64 // nc
+        off = s64 - c_of_src * nc
+        row = off // q
+        src_loc = (c_of_src * q + (off - row * q)).astype(np.int32)
+        col = d64 // nc
+        dst_loc = (d64 - col * nc).astype(np.int32)
+        # capacity pre-check: nothing is mutated on overflow, so the
+        # caller's full re-prepare sees a consistent partition
+        add = np.zeros((p.d, p.mo), np.int64)
+        np.add.at(add, (row, col), 1)
+        if np.any(p.e_counts + add > p.e_max):
+            return False
+        a = self.dist.arrays
+        new_src_local, new_dst_local = a.src_local, a.dst_local
+        for r, c in {(int(r), int(c)) for r, c in zip(row, col)}:
+            sel = (row == r) & (col == c)
+            s_row = p.src_local[r, c]
+            d_row = p.dst_local[r, c]
+            cnt = int(p.e_counts[r, c])
+            for sl, dl in sorted(zip(src_loc[sel], dst_loc[sel]),
+                                 key=lambda e: e[1]):
+                ins = int(np.searchsorted(d_row[:cnt], dl, side="right"))
+                s_row[ins + 1:cnt + 1] = s_row[ins:cnt].copy()
+                d_row[ins + 1:cnt + 1] = d_row[ins:cnt].copy()
+                s_row[ins], d_row[ins] = sl, dl
+                cnt += 1
+            p.e_counts[r, c] = cnt
+            new_src_local = new_src_local.at[r, c].set(jnp.asarray(s_row))
+            new_dst_local = new_dst_local.at[r, c].set(jnp.asarray(d_row))
+        # 1/w changed only at the src endpoints of the new edges
+        g = np.unique(s64)
+        c_of = g // nc
+        off_g = g - c_of * nc
+        r_g = off_g // q
+        loc_g = c_of * q + (off_g - r_g * q)
+        vals = jnp.asarray(self.host.inv_w[g], a.inv_w_src.dtype)
+        self.dist.arrays = dataclasses.replace(
+            a, src_local=new_src_local, dst_local=new_dst_local,
+            inv_w_src=a.inv_w_src.at[r_g, loc_g].set(vals))
+        self.ops = self.host.to_device(self.dtype)   # epilogue consistency
         return True

@@ -6,8 +6,8 @@ iteration from the previous s* instead of c needs only
 O(log(‖Δs*‖/ε) / log(1/ρ)) iterations — typically a handful for small updates.
 
 :class:`PsiService` is built on the unified :class:`~repro.core.engine.PsiEngine`
-abstraction: any registered backend (``reference``, ``pallas``,
-``distributed``) serves queries, every backend warm-starts from the previous
+abstraction: any registered backend (``reference``, ``pallas``, ``auto``,
+``accelerated``, ``distributed``) serves queries, every backend warm-starts from the previous
 fixed point, and mutations go through the engines' O(Δ) delta hooks
 (``patch_activity`` / ``patch_edges``) instead of a full operator rebuild.
 :class:`RankingCache` is the batched query layer shared with
@@ -75,20 +75,32 @@ class PsiService:
     Args:
       graph, activity: the initial platform state.
       tol / max_iter: shared convergence criterion for every (re)solve.
-      backend: engine name — ``reference`` (default), ``pallas`` or
-        ``distributed``; see :func:`repro.core.engine.make_engine`.
-      engine_opts: extra backend kwargs (``tile=...``, ``mesh=...``, ...).
+      backend: engine name — ``reference`` (default), ``pallas``, ``auto``,
+        ``accelerated`` or ``distributed``; see
+        :func:`repro.core.engine.make_engine`.
+      accelerate: opt the chosen backend into the Aitken-extrapolated loop
+        (chunk-level for ``distributed``); ``accelerated`` implies it.
+      check_every: gap-evaluation cadence of the solver loop (see
+        docs/AUTOTUNE.md); 1 keeps the per-iteration check.
+      engine_opts: extra backend kwargs (``tile=...``, ``mesh=...``,
+        ``microbench=...``, ...).
     """
 
     def __init__(self, graph: Graph, activity: Activity, *, tol: float = 1e-8,
                  max_iter: int = 10_000, backend: str = "reference",
+                 accelerate: bool = False, check_every: int = 1,
                  dtype=None, engine_opts: dict | None = None):
         import jax.numpy as jnp
         self.tol = tol
         self.max_iter = max_iter
+        opts = dict(engine_opts or {})
+        if accelerate:
+            opts.setdefault("accelerate", True)
+        if check_every != 1:
+            opts.setdefault("check_every", check_every)
         self._engine: PsiEngine = make_engine(
             backend, graph=graph, activity=activity,
-            dtype=dtype or jnp.float32, **(engine_opts or {}))
+            dtype=dtype or jnp.float32, **opts)
         self._last: PsiResult | None = None
         self._cache: RankingCache | None = None
 

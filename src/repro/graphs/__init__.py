@@ -1,7 +1,9 @@
 """Graph substrate: structure, generators, datasets, partitioning, sampling."""
 from .structure import Graph
-from .generators import erdos_renyi, barabasi_albert, powerlaw_configuration, rmat
+from .generators import (erdos_renyi, barabasi_albert,
+                         powerlaw_configuration, rmat, clustered_blocks)
 from .datasets import load_dataset, DATASETS
 
 __all__ = ["Graph", "erdos_renyi", "barabasi_albert",
-           "powerlaw_configuration", "rmat", "load_dataset", "DATASETS"]
+           "powerlaw_configuration", "rmat", "clustered_blocks",
+           "load_dataset", "DATASETS"]

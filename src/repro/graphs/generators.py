@@ -13,6 +13,7 @@ from .structure import Graph
 
 __all__ = [
     "erdos_renyi", "barabasi_albert", "powerlaw_configuration", "rmat",
+    "clustered_blocks",
 ]
 
 
@@ -102,6 +103,44 @@ def barabasi_albert(n: int, m_per_node: int, *, seed: int = 0,
     src = np.concatenate(src_l)
     dst = np.concatenate(dst_l)
     return Graph(n, src.astype(np.int32), dst.astype(np.int32), name=name)
+
+
+def clustered_blocks(n: int, m: int, *, block: int = 128, p_in: float = 0.95,
+                     seed: int = 0, name: str = "clustered") -> Graph:
+    """Community-structured graph with id-aligned blocks of ``block`` nodes.
+
+    A fraction ``p_in`` of edges falls inside a node's own block, the rest
+    are uniform — the dense-diagonal regime where the BSR/MXU format's tile
+    occupancy is high (the regime-autotuner's counterpoint to the
+    hyper-sparse configuration models; see kernels/autotune.py).
+    """
+    rng = np.random.default_rng(seed)
+    # feasibility: the retry loop below can only terminate if m distinct
+    # edges exist under the block structure
+    sizes = np.diff(np.append(np.arange(0, n, block), n))
+    intra_cap = int((sizes * (sizes - 1)).sum())
+    cap = intra_cap if p_in >= 1.0 else n * (n - 1)
+    if m > cap:
+        raise ValueError(f"m={m} exceeds the {cap} distinct edges possible "
+                         f"for n={n}, block={block}, p_in={p_in}")
+    factor = 1.3
+    while True:
+        k = int(m * factor) + 16
+        src = rng.integers(0, n, k, dtype=np.int64)
+        b0 = (src // block) * block
+        bsize = np.minimum(block, n - b0)          # last block may be short
+        intra = b0 + rng.integers(0, 1 << 30, k, dtype=np.int64) % bsize
+        inter = rng.integers(0, n, k, dtype=np.int64)
+        dst = np.where(rng.random(k) < p_in, intra, inter)
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        key = src * n + dst
+        _, idx = np.unique(key, return_index=True)
+        if idx.size >= m:
+            idx = idx[rng.permutation(idx.size)[:m]]
+            return Graph(n, src[idx].astype(np.int32),
+                         dst[idx].astype(np.int32), name=name)
+        factor *= 1.5
 
 
 def rmat(scale: int, edge_factor: int = 16, *, a: float = 0.57,

@@ -1,0 +1,244 @@
+"""Regime autotuner: pick the cheapest execution plan per graph.
+
+``kernels/formats.py`` keeps two TPU-native SpMV layouts — the edge-tile
+format (VPU gathers + one-hot MXU scatter; right for hyper-sparse social
+graphs) and the BSR format (dense ``ts × td`` MXU tiles; wins on clustered
+operators with decent tile occupancy).  Until this module the engine
+hardcoded the edge-tile regime and BSR was an ablation.  The planner makes
+the choice per graph:
+
+1. **Measured-occupancy cost model** (default).  One O(M) ``bincount`` /
+   ``unique`` pass per candidate parameterization estimates the HBM bytes a
+   single Power-ψ step moves under each regime — the quantity a bandwidth-
+   bound SpMV is actually limited by:
+
+     * edge-tile:  per block, two i32 index planes plus the gathered source
+       floats (``12 B/slot``), padded to ``ceil(cnt_t / eblk)`` blocks per
+       node tile, plus the 4 node-vector streams per output tile.
+     * BSR:        every materialized block streams its dense ``ts·td``
+       f32 tile (``4 B / slot`` ≡ ``4/occupancy`` bytes per edge), plus the
+       output/epilogue vectors per dst tile.
+
+2. **One-shot micro-benchmark** (``microbench=True``).  Builds *every*
+   candidate of both regimes, times one jitted step of each (after a warmup
+   compile), and picks the measured winner — the model can mis-rank
+   parameterizations *within* a regime, not just between regimes.  Ground
+   truth when the model's constants are off for a platform (e.g. interpret
+   mode on CPU); costs one format build + step compile per candidate.
+
+Plans are memoized in a process-level cache keyed by a *structural*
+fingerprint of the graph (node/edge counts plus a strided edge sample) and
+the candidate space — activity patches never touch the key, so serving-path
+``patch_activity`` / warm re-``prepare`` cycles never re-plan.  See
+docs/AUTOTUNE.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..graphs.structure import Graph
+from .formats import build_bsr, build_edge_tiles
+
+__all__ = ["RegimePlan", "PlanCache", "PLAN_CACHE", "graph_fingerprint",
+           "estimate_edge_tile_cost", "estimate_bsr_cost", "plan_regime"]
+
+
+# Default candidate spaces. Lane dims stay multiples of 128 (TPU tiling);
+# the sublane/edge-block dims trade padding waste against per-block overhead.
+EDGE_TILE_CANDIDATES: tuple[tuple[int, int, int], ...] = (
+    (256, 8, 128),            # (tile, e1, e2) — the historical default
+    (128, 8, 128),
+    (512, 8, 128),
+)
+BSR_CANDIDATES: tuple[tuple[int, int], ...] = (
+    (128, 128),               # (ts, td) — one MXU pass per block
+    (128, 256),
+)
+
+# Rough per-slot HBM traffic in bytes (see module docstring). Absolute
+# values only matter relative to each other; microbench overrides both.
+_EDGE_SLOT_BYTES = 12.0       # 2 × i32 index + 1 × f32 gather per edge slot
+_BSR_SLOT_BYTES = 4.0         # f32 tile value per slot
+_NODE_STREAM_BYTES = 16.0     # mu, c, s_old, s_new per output element
+
+
+@dataclasses.dataclass(frozen=True)
+class RegimePlan:
+    """A resolved execution plan for ``PallasEngine``."""
+
+    regime: str               # "edge_tile" | "bsr"
+    tile: int = 256           # edge-tile params (used when regime=edge_tile)
+    e1: int = 8
+    e2: int = 128
+    ts: int = 128             # BSR params (used when regime=bsr)
+    td: int = 128
+    est_bytes: float = 0.0    # modeled HBM bytes per step for the winner
+    measured_us: float = 0.0  # microbenchmark result (0 when model-only)
+
+    def params(self) -> dict:
+        if self.regime == "edge_tile":
+            return dict(tile=self.tile, e1=self.e1, e2=self.e2)
+        return dict(ts=self.ts, td=self.td)
+
+
+# --------------------------------------------------------------------- #
+# Cost model — one O(M) pass per candidate, no format materialization
+# --------------------------------------------------------------------- #
+def estimate_edge_tile_cost(graph: Graph, *, tile: int, e1: int,
+                            e2: int) -> float:
+    """Modeled HBM bytes per fused step under the edge-tile regime."""
+    eblk = e1 * e2
+    num_tiles = max(1, -(-graph.n // tile))
+    _, dst = graph.edges_by_dst
+    counts = np.bincount(dst // tile, minlength=num_tiles)
+    blocks = np.maximum(1, -(-counts // eblk))
+    padded_slots = float(blocks.sum()) * eblk
+    return padded_slots * _EDGE_SLOT_BYTES + \
+        num_tiles * tile * _NODE_STREAM_BYTES
+
+
+def estimate_bsr_cost(graph: Graph, *, ts: int, td: int) -> float:
+    """Modeled HBM bytes per step under the BSR regime."""
+    nst = max(1, -(-graph.n // ts))
+    ndt = max(1, -(-graph.n // td))
+    src, dst = graph.edges_by_dst
+    key = (dst // td).astype(np.int64) * nst + src // ts
+    nonempty = np.unique(key).size if key.size else 0
+    # uncovered dst tiles get an explicit zero block (see build_bsr)
+    covered = np.unique(dst // td).size if dst.size else 0
+    num_blocks = max(1, nonempty + (ndt - covered))
+    return float(num_blocks) * ts * td * _BSR_SLOT_BYTES + \
+        ndt * td * _NODE_STREAM_BYTES
+
+
+# --------------------------------------------------------------------- #
+# Plan cache — structural fingerprint, stable under activity patches
+# --------------------------------------------------------------------- #
+def graph_fingerprint(graph: Graph, *, sample: int = 64) -> tuple:
+    """Cheap structural key: (n, m) plus a strided edge sample.
+
+    Activity rates are deliberately absent — the regime choice depends only
+    on sparsity structure, so ``patch_activity`` (and warm re-``prepare``
+    with the same graph) hits the cache.  A fingerprint collision can only
+    yield a valid-but-suboptimal plan, never a wrong answer.
+    """
+    src, dst = graph.edges_by_dst
+    stride = max(1, graph.m // sample)
+    return (graph.n, graph.m, tuple(np.asarray(src[::stride]).tolist()),
+            tuple(np.asarray(dst[::stride]).tolist()))
+
+
+class PlanCache:
+    """Process-level memo of :func:`plan_regime` results with hit stats."""
+
+    def __init__(self):
+        self._plans: dict[tuple, RegimePlan] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, key: tuple) -> RegimePlan | None:
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.hits += 1
+        return plan
+
+    def store(self, key: tuple, plan: RegimePlan) -> None:
+        self.misses += 1
+        self._plans[key] = plan
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self.hits = self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+
+PLAN_CACHE = PlanCache()
+
+
+# --------------------------------------------------------------------- #
+# The planner
+# --------------------------------------------------------------------- #
+def _microbench_step(graph: Graph, plan: RegimePlan, dtype,
+                     interpret: bool) -> float:
+    """Median wall-time (µs) of one jitted Power-ψ push under ``plan``."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from .ops import DeviceBsr, DeviceEdgeTiles, bsr_spmv, edge_spmv
+
+    s = jnp.asarray(np.random.default_rng(0).random(graph.n), dtype)
+    if plan.regime == "edge_tile":
+        fmt = DeviceEdgeTiles.from_format(
+            build_edge_tiles(graph, tile=plan.tile, e1=plan.e1, e2=plan.e2))
+        step = jax.jit(lambda v: edge_spmv(v, fmt, interpret=interpret))
+    else:
+        fmt = DeviceBsr.from_format(
+            build_bsr(graph, ts=plan.ts, td=plan.td,
+                      dtype=np.dtype(jnp.dtype(dtype).name)))
+        step = jax.jit(lambda v: bsr_spmv(v, fmt, interpret=interpret))
+    jax.block_until_ready(step(s))                     # compile
+    times = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(s))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def plan_regime(graph: Graph, *, microbench: bool = False,
+                dtype=None, interpret: bool | None = None,
+                edge_tile_candidates=EDGE_TILE_CANDIDATES,
+                bsr_candidates=BSR_CANDIDATES,
+                cache: PlanCache | None = PLAN_CACHE) -> RegimePlan:
+    """Choose edge-tile vs BSR (and their parameters) for ``graph``.
+
+    The model pass scores every candidate of both regimes; with
+    ``microbench=True`` every candidate is then timed once and the
+    measured winner is returned.  Results are memoized in ``cache`` (pass
+    ``cache=None`` to bypass).
+    """
+    key = None
+    if cache is not None:
+        key = graph_fingerprint(graph) + (
+            bool(microbench), tuple(edge_tile_candidates),
+            tuple(bsr_candidates))
+        hit = cache.lookup(key)
+        if hit is not None:
+            return hit
+
+    candidates = [
+        RegimePlan(regime="edge_tile", tile=t, e1=a, e2=b,
+                   est_bytes=estimate_edge_tile_cost(graph, tile=t, e1=a,
+                                                     e2=b))
+        for t, a, b in edge_tile_candidates
+    ] + [
+        RegimePlan(regime="bsr", ts=ts, td=td,
+                   est_bytes=estimate_bsr_cost(graph, ts=ts, td=td))
+        for ts, td in bsr_candidates
+    ]
+
+    if microbench:
+        # measured ground truth: one timed step per candidate — the model
+        # only breaks exact ties (its constants are TPU-HBM oriented and
+        # can mis-rank parameterizations on other platforms)
+        import jax.numpy as jnp
+
+        from .ops import default_interpret
+        dtype = dtype or jnp.float32
+        interpret = default_interpret() if interpret is None else interpret
+        timed = [dataclasses.replace(
+            p, measured_us=_microbench_step(graph, p, dtype, interpret))
+            for p in candidates]
+        plan = min(timed, key=lambda p: (p.measured_us, p.est_bytes))
+    else:
+        plan = min(candidates, key=lambda p: p.est_bytes)
+
+    if cache is not None:
+        cache.store(key, plan)
+    return plan

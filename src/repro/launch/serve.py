@@ -20,7 +20,17 @@ def main() -> None:
     ap.add_argument("--gen-len", type=int, default=8)
     ap.add_argument("--backend", default="reference",
                     help="ψ solver backend (see repro.core.engine): "
-                         "reference | pallas | distributed")
+                         "reference | pallas | auto | accelerated | "
+                         "distributed")
+    ap.add_argument("--accelerate", action="store_true",
+                    help="wrap the backend's step in the Aitken-"
+                         "extrapolated loop (docs/AUTOTUNE.md)")
+    ap.add_argument("--check-every", type=int, default=1,
+                    help="evaluate the convergence gap every k-th "
+                         "iteration (amortizes the O(N) reduction)")
+    ap.add_argument("--microbench", action="store_true",
+                    help="auto backend: time one step of every regime "
+                         "candidate instead of trusting the cost model")
     ap.add_argument("--top-k", type=int, default=3)
     args = ap.parse_args()
 
@@ -37,7 +47,16 @@ def main() -> None:
         g = powerlaw_configuration(10_000, 70_000, seed=5)
         act = heterogeneous(g.n, seed=6)
         t0 = time.perf_counter()
-        svc = PsiService(g, act, tol=1e-8, backend=args.backend)
+        engine_opts = {"microbench": True} if (
+            args.backend == "auto" and args.microbench) else None
+        svc = PsiService(g, act, tol=1e-8, backend=args.backend,
+                         accelerate=args.accelerate,
+                         check_every=args.check_every,
+                         engine_opts=engine_opts)
+        regime = getattr(svc.engine, "regime", None)
+        print(f"[serve] backend={svc.backend}"
+              + (f" regime={regime}" if regime else "")
+              + (" accelerated" if args.accelerate else ""))
         svc.scores()
         print(f"[serve] backend={svc.backend} warm in "
               f"{time.perf_counter() - t0:.2f}s "

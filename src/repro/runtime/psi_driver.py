@@ -28,6 +28,7 @@ import numpy as np
 
 from ..ckpt import checkpoint
 from ..core.distributed import DistributedPsi
+from ..core.engine import ChunkExtrapolator
 from ..core.incremental import RankingCache
 from ..graphs.partition import partition_2d
 
@@ -50,19 +51,23 @@ class DriverReport:
 
 class PsiDriver:
     def __init__(self, dist: DistributedPsi, *, ckpt_dir: str | None = None,
-                 chunk_iters: int = 16, deadline_factor: float = 3.0):
+                 chunk_iters: int = 16, deadline_factor: float = 3.0,
+                 accelerate: bool = False):
         self.dist = dist
         self.ckpt_dir = ckpt_dir
         self.chunk_iters = chunk_iters
         self.deadline_factor = deadline_factor
+        self.accelerate = accelerate         # chunk-level Aitken jumps
         self._warm_s = None                  # set by remesh(): elastic resume
 
     @classmethod
     def from_engine(cls, engine, **kw) -> "PsiDriver":
-        """Build a driver from a prepared ``distributed`` PsiEngine."""
+        """Build a driver from a prepared ``distributed`` PsiEngine
+        (inherits the engine's ``accelerate`` setting)."""
         if getattr(engine, "dist", None) is None:
             raise ValueError("engine has no distributed state; "
                              "use make_engine('distributed', graph=..., ...)")
+        kw.setdefault("accelerate", getattr(engine, "accelerate", False))
         return cls(engine.dist, chunk_iters=engine.chunk_iters, **kw)
 
     def run(self, *, tol: float = 1e-8, max_iter: int = 2000,
@@ -81,6 +86,7 @@ class PsiDriver:
         # later runs must resume their own progress, not this stale snapshot)
         s = dist.arrays.c_src if self._warm_s is None else self._warm_s
         self._warm_s = None
+        extrap = ChunkExtrapolator(tol) if self.accelerate else None
         it = 0
         chunk_idx = 0
         restarts = 0
@@ -111,12 +117,16 @@ class PsiDriver:
                         data["s"], jax.sharding.NamedSharding(
                             dist.mesh, _src_spec(dist)))
                     it = int(data["it"])
+                if extrap is not None:
+                    extrap.reset()       # restored s breaks the Δ history
                 chunk_idx += 1
                 continue
 
-            s = s_new
-            it += self.chunk_iters
             gap = float(gap_dev)
+            # chunk-level Aitken jump (verified by the next chunk's plain
+            # steps — Eq. 19 semantics preserved, see ChunkExtrapolator)
+            s = extrap.advance(s, s_new, gap) if extrap else s_new
+            it += self.chunk_iters
             chunk_idx += 1
             if self.ckpt_dir:
                 checkpoint.save(self.ckpt_dir, it, dict(s=s,

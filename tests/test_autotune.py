@@ -1,0 +1,101 @@
+"""Regime autotuner: cost model, plan cache, auto/accelerated engine loops."""
+import numpy as np
+import pytest
+
+from repro.graphs import clustered_blocks, erdos_renyi, powerlaw_configuration
+from repro.kernels import autotune
+from repro.kernels.autotune import (PlanCache, RegimePlan, plan_regime,
+                                    estimate_bsr_cost,
+                                    estimate_edge_tile_cost)
+from repro.kernels.formats import build_bsr, build_edge_tiles
+
+
+@pytest.fixture(scope="module")
+def sparse_graph():
+    return powerlaw_configuration(1000, 7000, seed=17)
+
+
+@pytest.fixture(scope="module")
+def clustered_graph():
+    return clustered_blocks(512, 24_000, block=128, p_in=1.0, seed=3)
+
+
+def test_model_picks_edge_tile_for_hyper_sparse(sparse_graph):
+    plan = plan_regime(sparse_graph, cache=None)
+    assert plan.regime == "edge_tile"
+    assert build_bsr(sparse_graph).occupancy < 0.05
+
+
+def test_model_picks_bsr_for_dense_clusters(clustered_graph):
+    plan = plan_regime(clustered_graph, cache=None)
+    assert plan.regime == "bsr"
+    assert build_bsr(clustered_graph).occupancy > 0.2
+
+
+def test_cost_model_tracks_padding_waste(sparse_graph):
+    """The edge-tile estimate must charge for block padding: a tiny eblk
+    wastes less on a hyper-sparse graph than a huge one."""
+    g = sparse_graph
+    small = estimate_edge_tile_cost(g, tile=256, e1=8, e2=128)
+    # an (unrealistically) large edge block pads every node tile up to it
+    huge = estimate_edge_tile_cost(g, tile=256, e1=64, e2=128)
+    assert small < huge
+    fmt = build_edge_tiles(g, tile=256, e1=8, e2=128)
+    assert small >= fmt.num_blocks * fmt.eblk * 12   # ≥ the slot traffic
+
+
+def test_bsr_cost_scales_with_materialized_blocks(sparse_graph,
+                                                  clustered_graph):
+    cs = estimate_bsr_cost(sparse_graph, ts=128, td=128)
+    cc = estimate_bsr_cost(clustered_graph, ts=128, td=128)
+    # the sparse graph materializes nearly every block at 7k edges; the
+    # block-diagonal graph touches only its diagonal
+    assert cs / sparse_graph.m > cc / clustered_graph.m
+
+
+def test_plan_cache_stable_under_structure_not_activity(sparse_graph):
+    cache = PlanCache()
+    p1 = plan_regime(sparse_graph, cache=cache)
+    p2 = plan_regime(sparse_graph, cache=cache)
+    assert p1 == p2
+    assert (cache.hits, cache.misses) == (1, 1)
+    # a different structure misses
+    plan_regime(erdos_renyi(200, 900, seed=1), cache=cache)
+    assert (cache.hits, cache.misses) == (1, 2)
+
+
+def test_plan_cache_key_includes_candidates(sparse_graph):
+    cache = PlanCache()
+    plan_regime(sparse_graph, cache=cache)
+    plan_regime(sparse_graph, cache=cache,
+                edge_tile_candidates=((128, 8, 128),))
+    assert cache.misses == 2                 # different search space
+
+
+def test_microbench_returns_measured_plan(clustered_graph):
+    plan = plan_regime(clustered_graph, microbench=True, cache=None)
+    assert plan.measured_us > 0
+    # on this graph model and measurement agree: dense diagonal → BSR
+    assert plan.regime == "bsr"
+
+
+def test_plan_params_roundtrip():
+    et = RegimePlan(regime="edge_tile", tile=128, e1=8, e2=128)
+    assert et.params() == dict(tile=128, e1=8, e2=128)
+    bs = RegimePlan(regime="bsr", ts=128, td=256)
+    assert bs.params() == dict(ts=128, td=256)
+
+
+def test_clustered_blocks_rejects_infeasible_m():
+    """More edges than the block structure can host must fail fast, not
+    retry-oversample forever."""
+    with pytest.raises(ValueError, match="exceeds"):
+        clustered_blocks(256, 70_000, block=128, p_in=1.0)
+
+
+def test_global_cache_is_default(sparse_graph):
+    autotune.PLAN_CACHE.clear()
+    plan_regime(sparse_graph)
+    plan_regime(sparse_graph)
+    assert autotune.PLAN_CACHE.hits == 1
+    autotune.PLAN_CACHE.clear()

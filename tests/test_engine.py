@@ -3,13 +3,13 @@ import numpy as np
 import pytest
 
 import repro.core.operators as operators_mod
-from repro.graphs import powerlaw_configuration
-from repro.core import (Activity, heterogeneous, exact_psi, make_engine,
-                        available_backends, ConvergenceCriterion, PsiService,
-                        HostOperators, build_operators, power_psi)
+from repro.graphs import clustered_blocks, erdos_renyi, powerlaw_configuration
+from repro.core import (Activity, heterogeneous, homogeneous, exact_psi,
+                        make_engine, available_backends, ConvergenceCriterion,
+                        PsiService, HostOperators, build_operators, power_psi)
 from repro.graphs.structure import Graph
 
-BACKENDS = ["reference", "pallas", "distributed"]
+BACKENDS = ["reference", "pallas", "auto", "accelerated", "distributed"]
 
 
 @pytest.fixture(scope="module")
@@ -245,3 +245,223 @@ def test_service_warm_start_fewer_iterations(platform):
     cold = svc.last_iterations()
     svc.update_activity(np.asarray([7]), mu=np.asarray([act.mu[7] * 1.01]))
     assert svc.last_iterations() < cold
+
+
+# --------------------------------------------------------------------- #
+# Regime autotuning + acceleration: the auto / accelerated backends
+# --------------------------------------------------------------------- #
+def _graph_for(kind: str) -> Graph:
+    if kind == "hyper_sparse":
+        return powerlaw_configuration(600, 4000, seed=11)
+    return clustered_blocks(512, 30_000, block=128, p_in=1.0, seed=12)
+
+
+@pytest.mark.parametrize("act_kind", ["het", "hom"])
+@pytest.mark.parametrize("graph_kind", ["hyper_sparse", "clustered"])
+@pytest.mark.parametrize("backend", ["auto", "accelerated"])
+def test_parity_across_regimes(backend, graph_kind, act_kind):
+    """auto/accelerated agree with reference to ≤ 1e-6 on both activity
+    regimes × both graph regimes (the clustered graph exercises the BSR
+    kernel path, the hyper-sparse one the edge-tile path)."""
+    g = _graph_for(graph_kind)
+    act = (heterogeneous(g.n, seed=13) if act_kind == "het"
+           else homogeneous(g.n))
+    ref = make_engine("reference", graph=g, activity=act).run(tol=1e-9)
+    eng = make_engine(backend, graph=g, activity=act)
+    res = eng.run(tol=1e-9)
+    assert np.abs(np.asarray(res.psi) - np.asarray(ref.psi)).max() <= 1e-6
+    if backend == "auto":   # the planner must separate the two regimes
+        assert eng.regime == ("edge_tile" if graph_kind == "hyper_sparse"
+                              else "bsr")
+
+
+def test_accelerated_backend_fewer_matvecs(platform):
+    g, act, _, _ = platform
+    ref = make_engine("reference", graph=g, activity=act).run(tol=1e-6)
+    acc = make_engine("accelerated", graph=g, activity=act).run(tol=1e-6)
+    assert bool(acc.converged)
+    assert int(acc.matvecs) < int(ref.matvecs)
+
+
+def test_pallas_accelerate_opt_in(platform):
+    g, act, psi_true, _ = platform
+    eng = make_engine("pallas", graph=g, activity=act, accelerate=True)
+    res = eng.run(tol=1e-6)
+    assert bool(res.converged)
+    assert np.abs(np.asarray(res.psi) - psi_true).max() <= 1e-6
+
+
+def test_check_every_cadence(platform):
+    """iterations land on a multiple of k, overshoot < k, same answer."""
+    g, act, psi_true, _ = platform
+    base = make_engine("reference", graph=g, activity=act).run(tol=1e-9)
+    eng = make_engine("reference", graph=g, activity=act, check_every=4)
+    res = eng.run(tol=1e-9)
+    assert int(res.iterations) % 4 == 0
+    assert int(base.iterations) <= int(res.iterations) \
+        < int(base.iterations) + 4
+    assert np.abs(np.asarray(res.psi) - psi_true).max() <= 1e-6
+    pal = make_engine("pallas", graph=g, activity=act, check_every=3)
+    resp = pal.run(tol=1e-9)
+    assert int(resp.iterations) % 3 == 0
+    assert np.abs(np.asarray(resp.psi) - psi_true).max() <= 1e-6
+
+
+def test_autotuner_plan_cache_no_replan_on_patch_activity(platform):
+    """The regression the serving path depends on: an activity patch (and a
+    warm re-prepare over the same graph) must reuse the cached plan and the
+    already-compiled solver loop."""
+    from repro.kernels.autotune import PlanCache
+    g, act, _, _ = platform
+    cache = PlanCache()
+    eng = make_engine("auto", graph=g, activity=act, plan_cache=cache)
+    assert (cache.hits, cache.misses) == (0, 1)
+    eng.run(tol=1e-6)
+    loop = eng._loop
+    compiles = loop._cache_size()
+    eng.patch_activity(np.asarray([3]), lam=np.asarray([2.0]))
+    eng.run(tol=1e-6)
+    assert cache.misses == 1               # no re-plan on the delta path
+    assert eng._loop is loop and loop._cache_size() == compiles
+    eng.prepare(g, act)                    # full rebuild, same structure
+    eng.run(tol=1e-6)
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert eng._loop is loop and loop._cache_size() == compiles
+
+
+def test_service_auto_backend_delta_roundtrip(platform, monkeypatch):
+    g, act, _, _ = platform
+    svc = PsiService(g, act, tol=1e-9, backend="auto")
+    svc.scores()
+    _forbid_full_rebuilds(monkeypatch)
+    u = 5
+    svc.update_activity(np.asarray([u]), lam=np.asarray([4.0]))
+    lam2 = act.lam.copy()
+    lam2[u] = 4.0
+    psi_true, _ = exact_psi(g, Activity(lam2, act.mu))
+    assert np.abs(svc.scores() - psi_true).max() <= 1e-6
+
+
+def test_bsr_regime_delta_updates(monkeypatch):
+    """BSR-regime pallas absorbs activity and edge patches in place."""
+    g = _graph_for("clustered")
+    act = heterogeneous(g.n, seed=13)
+    svc = PsiService(g, act, tol=1e-9, backend="pallas",
+                     engine_opts=dict(regime="bsr"))
+    svc.scores()
+    _forbid_full_rebuilds(monkeypatch)
+    svc.update_activity(np.asarray([2]), mu=np.asarray([0.8]))
+    # in-block edge insert (block (0,0) exists) and a cross-block edge
+    # that forces the internal format rebuild — both stay correct
+    src = np.asarray([0, 3], np.int32)
+    dst = np.asarray([7, 400], np.int32)
+    svc.add_edges(src, dst)
+    g2 = Graph(g.n, np.concatenate([g.src, src]),
+               np.concatenate([g.dst, dst])).dedup()
+    act2 = Activity(act.lam, np.where(np.arange(g.n) == 2, 0.8, act.mu))
+    psi_true, _ = exact_psi(g2, act2)
+    assert np.abs(svc.scores() - psi_true).max() <= 1e-6
+
+
+def test_edge_tile_patch_overflow_rebuilds(platform, monkeypatch):
+    """Overflowing a node tile's sentinel slots triggers the edge-tile
+    format rebuild (never a full operator rebuild) and stays exact."""
+    g, act, _, _ = platform
+    svc = PsiService(g, act, tol=1e-9, backend="pallas")
+    svc.scores()
+    eng = svc.engine
+    blocks_before = eng.fmt_host.num_blocks
+    _forbid_full_rebuilds(monkeypatch)
+    # enough new edges into tile 0 (dst < 256) to exhaust its free slots
+    need = int((eng._tile_capacity - eng._tile_used)[0]) + 16
+    existing = set(zip(g.src.tolist(), g.dst.tolist()))
+    rng = np.random.default_rng(0)
+    pairs = set()
+    while len(pairs) < need:
+        s = int(rng.integers(0, g.n))
+        d = int(rng.integers(0, min(eng.tile, g.n)))
+        if s != d and (s, d) not in existing:
+            pairs.add((s, d))
+    pairs = sorted(pairs)
+    src = np.asarray([p[0] for p in pairs], np.int32)
+    dst = np.asarray([p[1] for p in pairs], np.int32)
+    svc.add_edges(src, dst)
+    assert eng.fmt_host.num_blocks > blocks_before
+    g2 = Graph(g.n, np.concatenate([g.src, src]),
+               np.concatenate([g.dst, dst])).dedup()
+    psi_true, _ = exact_psi(g2, act)
+    assert np.abs(svc.scores() - psi_true).max() <= 1e-6
+
+
+# --------------------------------------------------------------------- #
+# Distributed delta hook + chunk-level acceleration
+# --------------------------------------------------------------------- #
+def _mesh_1x1():
+    """Pin a 1×1 mesh: partition shapes must not depend on how many host
+    devices an earlier test (launch/dryrun) forced into the process."""
+    import jax
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])
+
+
+def test_distributed_patch_edges_block_local(platform, monkeypatch):
+    """The delta hook never re-partitions: new edges are merged into their
+    node-stable blocks and only the touched device rows are rewritten."""
+    import repro.core.distributed as dist_mod
+    g, act, _, _ = platform
+    eng = make_engine("distributed", graph=g, activity=act,
+                      mesh=_mesh_1x1())
+    prev = eng.run(tol=1e-9)
+
+    def boom(*a, **k):
+        raise AssertionError("re-partition on the delta path")
+
+    monkeypatch.setattr(dist_mod, "partition_2d", boom)
+    _forbid_full_rebuilds(monkeypatch)
+    src = np.asarray([0, 1, 2, 0], np.int32)
+    dst = np.asarray([10, 11, 12, 10], np.int32)   # dup collapses
+    assert eng.patch_edges(src, dst) is True
+    res = eng.run(tol=1e-9, s0=prev.s)
+    g2 = Graph(g.n, np.concatenate([g.src, src]),
+               np.concatenate([g.dst, dst])).dedup()
+    psi_true, _ = exact_psi(g2, act)
+    assert np.abs(np.asarray(res.psi) - psi_true).max() <= 1e-6
+
+
+def test_distributed_patch_edges_overflow_returns_false():
+    """A full block (e_max exhausted) is a genuine overflow: the hook
+    reports False and the service-level fallback re-prepares correctly."""
+    g = erdos_renyi(100, 256, seed=6)              # e_max == m: zero slack
+    act = heterogeneous(g.n, seed=7)
+    eng = make_engine("distributed", graph=g, activity=act,
+                      mesh=_mesh_1x1())
+    eng.run(tol=1e-9)
+    assert int(eng.dist.part.e_max) == g.m
+    assert eng.patch_edges(np.asarray([0]), np.asarray([50])) is False
+    svc = PsiService(g, act, tol=1e-9, backend="distributed",
+                     engine_opts=dict(mesh=_mesh_1x1()))
+    svc.add_edges(np.asarray([0]), np.asarray([50]))
+    g2 = Graph(g.n, np.concatenate([g.src, [0]]),
+               np.concatenate([g.dst, [50]])).dedup()
+    psi_true, _ = exact_psi(g2, act)
+    assert np.abs(svc.scores() - psi_true).max() <= 1e-6
+
+
+def test_distributed_chunk_accelerate(platform):
+    g, act, psi_true, _ = platform
+    eng = make_engine("distributed", graph=g, activity=act,
+                      accelerate=True, chunk_iters=4, mesh=_mesh_1x1())
+    res = eng.run(tol=1e-9)
+    assert bool(res.converged)
+    assert np.abs(np.asarray(res.psi) - psi_true).max() <= 1e-6
+
+
+def test_psi_driver_accelerate_inherited(platform):
+    from repro.runtime import PsiDriver
+    g, act, psi_true, _ = platform
+    eng = make_engine("distributed", graph=g, activity=act,
+                      accelerate=True, chunk_iters=4, mesh=_mesh_1x1())
+    drv = PsiDriver.from_engine(eng)
+    assert drv.accelerate is True
+    rep = drv.run(tol=1e-11)     # driver gap is unscaled (no ‖B‖ factor)
+    assert np.abs(rep.psi - psi_true).max() <= 1e-6
