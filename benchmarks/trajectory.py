@@ -12,6 +12,11 @@ replaces it), so speedups and regressions are measured, not asserted:
 * ``hyper_sparse`` / ``clustered`` — the float32 kernel-regime benchmark:
   ``pallas`` pinned to each regime vs the ``auto`` planner (acceptance:
   auto within 10 % of the best hand-picked regime on both graphs).
+* ``fleet`` — the multi-tenant serving benchmark: a bucket of small
+  tenants solved by one ``TenantFleet`` (vmapped masked batch,
+  docs/SERVING.md) vs the same tenants solved sequentially by solo
+  ``reference`` engines at the same tolerance (acceptance: ≥ 2×
+  tenants-per-second, every fleet ψ within tol of its solo solve).
 
 Run via ``python -m benchmarks.run --only trajectory`` (add ``--quick`` for
 the CI smoke sizes).
@@ -138,6 +143,54 @@ def run(quick: bool = False, json_path: str = JSON_PATH) -> list[dict]:
         emit(f"trajectory/{graph_name}/auto_vs_best",
              walls["auto"] / best * 100.0,
              "auto wall as % of best hand-picked regime")
+
+    # ---- fleet trajectory: tenants-per-device batched serving ---------- #
+    from repro.serving import TenantFleet
+
+    T = 8
+    n_t, m_t = (200, 1_000) if quick else (256, 1_500)
+    tol_f = 1e-6
+    fleet_tenants = [(powerlaw_configuration(n_t, m_t, seed=30 + i),
+                      heterogeneous(n_t, seed=60 + i)) for i in range(T)]
+    engines = [make_engine("reference", graph=g, activity=a)
+               for g, a in fleet_tenants]
+    solo_psi = [np.asarray(eng.run(tol=tol_f).psi) for eng in engines]
+    reps = 3 if quick else 5
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for eng in engines:
+            eng.run(tol=tol_f)                 # cold s₀ = c each, warm jit
+        times.append(time.perf_counter() - t0)
+    solo_wall = float(np.median(times))
+    fleet = TenantFleet(backend="dense", tol=tol_f)
+    for i, (g, a) in enumerate(fleet_tenants):
+        fleet.admit(f"t{i}", g, a)
+    fleet.solve()                              # compile + converge
+    fleet.invalidate()
+    fleet.solve()                              # settle the cold-solve path
+    times = []
+    for _ in range(reps):
+        fleet.invalidate()                     # cold s₀ = c, stacks kept
+        t0 = time.perf_counter()
+        fleet.solve()
+        times.append(time.perf_counter() - t0)
+    fleet_wall = float(np.median(times))
+    psi_err = max(float(np.abs(fleet.psi(f"t{i}") - solo_psi[i]).max())
+                  for i in range(T))
+    iters = [fleet.stats(f"t{i}")["iterations"] for i in range(T)]
+    entries.append(dict(
+        graph="fleet", backend="fleet[dense]", regime="dense", n=n_t,
+        m=m_t, dtype="float32", tol=tol_f, wall_s=fleet_wall,
+        iterations=int(max(iters)), matvecs=int(sum(iters) + T),
+        converged=all(fleet.stats(f"t{i}")["converged"] for i in range(T)),
+        gap=max(fleet.stats(f"t{i}")["gap"] for i in range(T)),
+        tenants=T, wall_s_solo=solo_wall,
+        tenants_per_s=T / fleet_wall, tenants_per_s_solo=T / solo_wall,
+        speedup=solo_wall / fleet_wall, psi_err=psi_err))
+    emit("trajectory/fleet/tenants_per_s", T / fleet_wall * 1.0,
+         f"solo={T / solo_wall:.1f}/s;speedup={solo_wall / fleet_wall:.2f}x"
+         f";psi_err={psi_err:.1e}")
 
     _append_run(entries, json_path, quick)
     return entries

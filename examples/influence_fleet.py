@@ -1,0 +1,93 @@
+"""Multi-tenant serving scenario: one device, a fleet of platforms.
+
+Several independent (graph, activity) tenants — different communities /
+topics, different sizes and sparsity regimes — are admitted into one
+``TenantFleet``: size-bucketed into padded batches and solved as vmapped
+convergence-masked Power-ψ loops (docs/SERVING.md).  The demo shows the
+three serving guarantees the fleet makes:
+
+* per-tenant correctness: every tenant's top-k matches a dedicated solve;
+* lane isolation: patching one tenant's activity mid-flight leaves every
+  co-tenant's ψ **bit-identical** (their lanes are masked out);
+* warm continuity: the patched tenant re-converges in a handful of
+  iterations from its previous fixed point.
+
+    PYTHONPATH=src python examples/influence_fleet.py [auto|dense|reference|pallas]
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import numpy as np
+
+from repro.graphs import clustered_blocks, powerlaw_configuration
+from repro.core import heterogeneous, make_engine
+from repro.serving import TenantFleet
+
+
+def main():
+    backend = sys.argv[1] if len(sys.argv) > 1 else "auto"
+    quick = "--quick" in sys.argv
+
+    # a fleet of communities: hyper-sparse social graphs and clustered
+    # block communities, deliberately mixed sizes so several buckets form
+    scale = 1 if quick else 4
+    tenants = {}
+    for k in range(6):
+        if k % 2 == 0:
+            g = powerlaw_configuration(500 * scale, 3_000 * scale,
+                                       seed=40 + k,
+                                       name=f"community{k}")
+        else:
+            g = clustered_blocks(256 * scale, 2_000 * scale, block=64,
+                                 p_in=0.9, seed=40 + k)
+        tenants[f"community{k}"] = (g, heterogeneous(g.n, seed=70 + k))
+
+    fleet = TenantFleet(backend=backend, tol=1e-8)
+    t0 = time.perf_counter()
+    for tid, (g, act) in tenants.items():
+        spec = fleet.admit(tid, g, act)
+        print(f"admit {tid}: n={g.n:5d} m={g.m:6d} → {spec}")
+    fleet.solve()
+    print(f"\nfleet[{fleet.backend}] solved {len(fleet)} tenants in "
+          f"{time.perf_counter() - t0:.2f}s; buckets:")
+    for spec, acct in fleet.occupancy().items():
+        print(f"  {spec}: {acct['tenants']} tenants regime={acct['regime']} "
+              f"node_occ={acct['node_occupancy']:.2f} "
+              f"edge_occ={acct['edge_occupancy']:.2f}")
+
+    frontier = fleet.frontier
+    print("\nper-tenant top-3 (vs dedicated reference solve):")
+    for tid, (g, act) in tenants.items():
+        top, vals = frontier.top_k(tid, 3)
+        solo = make_engine("reference", graph=g, activity=act).run(tol=1e-8)
+        err = np.abs(fleet.psi(tid) - np.asarray(solo.psi)).max()
+        print(f"  {tid}: top-3={top.tolist()} "
+              f"psi={np.round(vals, 6).tolist()} (L∞ vs solo {err:.1e})")
+
+    # one tenant's leader goes viral mid-flight — co-tenants must not move
+    victim = "community1"
+    others = {t: fleet.psi(t).copy() for t in tenants if t != victim}
+    star = int(frontier.top_k(victim, 1)[0][0])
+    t0 = time.perf_counter()
+    fleet.patch_activity(victim, np.asarray([star]),
+                         lam=np.asarray([tenants[victim][1].lam[star] * 40]))
+    fleet.solve()
+    print(f"\npatched {victim} user {star} (λ ×40): re-converged in "
+          f"{fleet.stats(victim)['iterations']} warm iterations "
+          f"({(time.perf_counter() - t0) * 1e3:.1f} ms)")
+    frozen = all(np.array_equal(prev, fleet.psi(t))
+                 for t, prev in others.items())
+    print(f"lane isolation: {len(others)} co-tenant ψ vectors bit-identical "
+          f"across the re-solve → {frozen}")
+    assert frozen, "a masked lane moved — convergence masking is broken"
+
+    top = frontier.global_top_k(5)
+    print("\nfleet-wide top-5 influencers:")
+    for t, u, s in top:
+        print(f"  {t} user {u}: ψ = {s:.3e}")
+
+
+if __name__ == "__main__":
+    main()

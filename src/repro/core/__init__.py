@@ -7,8 +7,10 @@ from .power_nf import PowerNFResult, power_nf
 from .pagerank import PageRankResult, build_pagerank_ops, pagerank
 from .exact import exact_psi
 from .engine import (ConvergenceCriterion, EngineState, PsiEngine,
-                     make_engine, register_backend, available_backends)
-from .incremental import PsiService, RankingCache
+                     make_engine, register_backend, available_backends,
+                     make_reference_step, make_dense_step,
+                     make_edge_tile_step, make_batched_loop)
+from .incremental import PsiService, RankingCache, RankedQueries
 from .accelerated import power_psi_accelerated
 
 __all__ = [
@@ -17,7 +19,10 @@ __all__ = [
     "PsiResult", "power_psi", "power_psi_fixed",
     "PowerNFResult", "power_nf",
     "PageRankResult", "build_pagerank_ops", "pagerank",
-    "exact_psi", "PsiService", "RankingCache", "power_psi_accelerated",
+    "exact_psi", "PsiService", "RankingCache", "RankedQueries",
+    "power_psi_accelerated",
     "ConvergenceCriterion", "EngineState", "PsiEngine",
     "make_engine", "register_backend", "available_backends",
+    "make_reference_step", "make_dense_step", "make_edge_tile_step",
+    "make_batched_loop",
 ]

@@ -66,7 +66,9 @@ from .power_psi import _NORMS, PsiResult
 __all__ = ["ConvergenceCriterion", "EngineState", "PsiEngine",
            "ReferenceEngine", "PallasEngine", "AutoEngine",
            "AcceleratedEngine", "DistributedEngine", "ChunkExtrapolator",
-           "make_engine", "register_backend", "available_backends"]
+           "make_engine", "register_backend", "available_backends",
+           "make_reference_step", "make_dense_step", "make_edge_tile_step",
+           "make_batched_loop"]
 
 
 # --------------------------------------------------------------------- #
@@ -193,7 +195,15 @@ class PsiEngine(abc.ABC):
     def _install_loops(self, one_step) -> None:
         """Build ``self._loop`` / ``self._step_jit`` from the backend's
         ``one_step(args, s) -> (s_new, raw_gap)`` closure, honoring the
-        ``accelerate`` / ``check_every`` loop-shaping options."""
+        ``accelerate`` / ``check_every`` loop-shaping options.
+
+        ``one_step`` is also kept on the engine as the public ``one_step``
+        attribute: it is *pure* in ``(args, s)`` (operators travel as pytree
+        arguments), so callers may ``jax.vmap`` it over a stacked batch of
+        same-shape operator pytrees — the contract the multi-tenant fleet
+        (:mod:`repro.serving`) builds its batched solver on via
+        :func:`make_batched_loop`."""
+        self.one_step = one_step
         if self.accelerate:
             self._loop = _make_accelerated_loop(
                 one_step, extrapolate_every=self.extrapolate_every)
@@ -247,6 +257,21 @@ def available_backends() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def _accepted_options(cls: type[PsiEngine]) -> set[str]:
+    """Every named keyword the backend's ``__init__`` chain accepts."""
+    import inspect
+    names: set[str] = set()
+    for klass in cls.__mro__:
+        init = klass.__dict__.get("__init__")
+        if init is None:
+            continue
+        for p in inspect.signature(init).parameters.values():
+            if p.name != "self" and p.kind in (p.KEYWORD_ONLY,
+                                               p.POSITIONAL_OR_KEYWORD):
+                names.add(p.name)
+    return names
+
+
 def make_engine(backend: str = "reference", *, graph: Graph | None = None,
                 activity: Activity | None = None, **opts) -> PsiEngine:
     """Factory: construct (and, when given a graph, prepare) a backend."""
@@ -255,6 +280,14 @@ def make_engine(backend: str = "reference", *, graph: Graph | None = None,
     except KeyError:
         raise ValueError(f"unknown backend {backend!r}; "
                          f"available: {available_backends()}") from None
+    unknown = set(opts) - _accepted_options(cls)
+    if unknown:
+        # a mistyped option — or an option that belongs to a different
+        # backend (e.g. mesh= on reference); point at the full registry
+        raise ValueError(
+            f"unknown engine option(s) {sorted(unknown)} for backend "
+            f"{backend!r} (accepts: {sorted(_accepted_options(cls))}); "
+            f"available backends: {available_backends()}")
     engine = cls(**opts)
     if graph is not None:
         if activity is None:
@@ -299,6 +332,122 @@ def _make_loop(step_with_gap, *, check_every: int = 1):
                          jnp.asarray(0, jnp.int32)))
 
     return loop
+
+
+def make_batched_loop(step_with_gap, *, check_every: int = 1):
+    """Vmapped, convergence-masked fleet loop over independent lanes.
+
+    ``step_with_gap`` is the same pure ``(args, s) -> (s_new, raw_gap)``
+    closure the solo loops consume (an engine's public ``one_step``); every
+    leaf of ``args`` and ``s`` gains a leading lane axis.  Returns a jitted
+
+        loop(args, s0, scale, tol, max_iter, active0) -> (s, gap, t)
+
+    with per-lane ``scale`` / ``gap`` / ``t``.  Each lane runs the solo
+    termination rule independently: a lane whose gap crosses ``tol`` (or
+    whose ``t`` hits ``max_iter``) *freezes* — ``jnp.where`` keeps its
+    series vector bitwise intact while the remaining lanes keep stepping —
+    and the whole loop exits when no lane is active.  ``active0`` masks
+    lanes out from the start (clean tenants sharing a bucket with a dirty
+    one never move at all), which is what makes a converged tenant's ψ
+    bit-stable across its neighbours' re-solves.
+
+    Per-lane iteration counts match the solo ``_make_loop`` semantics,
+    including the ``check_every=k`` cadence (``t`` lands on a multiple of
+    k for every lane that ran).
+    """
+    k = max(1, int(check_every))
+    vstep = jax.vmap(step_with_gap)
+
+    @jax.jit
+    def loop(args, s0, scale, tol, max_iter, active0):
+        lane_shape = (s0.shape[0],) + (1,) * (s0.ndim - 1)
+
+        def cond(st):
+            return jnp.any(st[-1])
+
+        def body(st):
+            s, gap, t, active = st
+            s_k = s
+            for _ in range(k - 1):          # unrolled; gaps DCE'd by XLA
+                s_k, _ = vstep(args, s_k)
+            s_new, raw = vstep(args, s_k)
+            gap_new = scale * raw
+            s_next = jnp.where(active.reshape(lane_shape), s_new, s)
+            gap_next = jnp.where(active, gap_new, gap)
+            t_next = jnp.where(active, t + k, t)
+            active_next = active & (gap_new > tol) & (t_next < max_iter)
+            return s_next, gap_next, t_next, active_next
+
+        lanes = s0.shape[0]
+        s, gap, t, _ = jax.lax.while_loop(
+            cond, body,
+            (s0, jnp.full((lanes,), jnp.inf, s0.dtype),
+             jnp.zeros((lanes,), jnp.int32), active0))
+        return s, gap, t
+
+    return loop
+
+
+def make_reference_step(norm: str = "l1"):
+    """The pure Alg. 2 step ``(PsiOperators, s) -> (s_new, raw_gap)``.
+
+    Stateless and therefore vmappable: stack the data fields of several
+    same-shape :class:`~repro.core.operators.PsiOperators` along a leading
+    lane axis (meta ``n`` / ``m`` shared) and the step batches.  Padded
+    lanes are inert by construction — zero-rate pad nodes keep ``s = 0``
+    and sentinel edges (``dst == n``) are dropped by the segment-sum.
+    """
+    nrm = _NORMS[norm]
+
+    def one_step(ops, s):
+        s_new = ops.mu * ops.push(s) + ops.c
+        return s_new, nrm(s_new - s)
+
+    return one_step
+
+
+def make_dense_step(norm: str = "l1"):
+    """The pure dense-matvec Alg. 2 step over ``(E, 1/w, μ, c)`` args.
+
+    ``E`` is the {0,1} follower→leader adjacency (``E[j, i] = 1`` iff j
+    follows i), so one matvec computes the push ``t = (s ⊙ 1/w) E`` and the
+    step is ``μ ⊙ t + c`` — identical math to the edge form, but a single
+    (batched) GEMV instead of a gather/scatter chain.  This is the fleet's
+    regime for *small* buckets: a stack of tiny tenants turns into one
+    ``[B, n, n]`` batched matvec (BLAS on CPU, MXU on TPU), which beats B
+    independent scatter pipelines by a wide margin exactly where the
+    multi-tenant batching case lives.  O(n²) memory per lane — the fleet
+    only auto-selects it under its ``dense_max_n`` threshold.
+    """
+    nrm = _NORMS[norm]
+
+    def one_step(args, s):
+        E, inv_w, mu, c = args
+        s_new = mu * ((s * inv_w) @ E) + c
+        return s_new, nrm(s_new - s)
+
+    return one_step
+
+
+def make_edge_tile_step(interpret: bool):
+    """The pure fused edge-tile step over ``(fmt, 1/w, μ, c)`` args.
+
+    Same calling convention as :func:`make_reference_step` but in the
+    pallas edge-tile regime's native padded ``[1, n_pad]`` layout; the args
+    tuple is ``(DeviceEdgeTiles, inv_w_gather, mu_pad, c_pad)``.  The
+    pallas call batches under ``jax.vmap`` (the batch axis becomes a grid
+    dimension), which is how the fleet runs many tenants per device
+    through one kernel launch.
+    """
+    from ..kernels.ops import power_step
+
+    def one_step(args, s):
+        fmt, inv_w_g, mu_pad, c_pad = args
+        return power_step(s, inv_w_g, mu_pad, c_pad, fmt,
+                          interpret=interpret)
+
+    return one_step
 
 
 def _make_accelerated_loop(step_with_gap, *, extrapolate_every: int = 8):
@@ -420,13 +569,7 @@ class ReferenceEngine(PsiEngine):
 
     def __init__(self, **kw):
         super().__init__(**kw)
-        nrm = self.criterion.norm_fn()
-
-        def one_step(ops, s):
-            s_new = ops.mu * ops.push(s) + ops.c
-            return s_new, nrm(s_new - s)
-
-        self._install_loops(one_step)
+        self._install_loops(make_reference_step(self.criterion.norm))
 
     def prepare(self, graph: Graph, activity: Activity) -> EngineState:
         self._base_prepare(graph, activity)
@@ -528,12 +671,7 @@ class PallasEngine(PsiEngine):
         self.regime = regime
         interp = self.interpret
         if regime == "edge_tile":
-            from ..kernels.ops import power_step
-
-            def one_step(args, s):
-                fmt, inv_w_g, mu_pad, c_pad = args
-                return power_step(s, inv_w_g, mu_pad, c_pad, fmt,
-                                  interpret=interp)
+            one_step = make_edge_tile_step(interp)
         else:
             from ..kernels.ops import bsr_spmv
 

@@ -13,6 +13,13 @@ fixed point, and mutations go through the engines' O(Δ) delta hooks
 :class:`RankingCache` is the batched query layer shared with
 ``launch/serve.py`` and ``runtime/psi_driver.py``: the descending order is
 computed once per fixed point and memoized until the next mutation.
+
+Since the multi-tenant fleet (:mod:`repro.serving`) landed, the read-side
+surface lives in the :class:`RankedQueries` mixin and ``PsiService`` is just
+its single-engine instantiation — the fleet's per-tenant
+:class:`~repro.serving.fleet.TenantView` is the other one, obtained here via
+:meth:`PsiService.from_fleet` so serving code can swap a dedicated engine
+for a fleet lane without touching its query sites.
 """
 from __future__ import annotations
 
@@ -23,7 +30,7 @@ from .activity import Activity
 from .engine import PsiEngine, make_engine
 from .power_psi import PsiResult
 
-__all__ = ["PsiService", "RankingCache"]
+__all__ = ["PsiService", "RankingCache", "RankedQueries"]
 
 
 class RankingCache:
@@ -69,7 +76,31 @@ class RankingCache:
             self._rank = rank
 
 
-class PsiService:
+class RankedQueries:
+    """Read-side ψ-query surface over an abstract ``_query()``.
+
+    Subclasses provide ``_query() -> RankingCache`` (fresh for the current
+    fixed point); the mixin supplies the four canonical reads so a
+    dedicated :class:`PsiService` and a fleet lane
+    (:class:`repro.serving.fleet.TenantView`) are interchangeable at every
+    query site.
+    """
+
+    def scores(self) -> np.ndarray:
+        return self._query().psi
+
+    def scores_batch(self, users: np.ndarray) -> np.ndarray:
+        """ψ for a batch of users (no ranking sort paid)."""
+        return self._query().scores_batch(users)
+
+    def top_k(self, k: int) -> tuple[np.ndarray, np.ndarray]:
+        return self._query().top_k(k)
+
+    def rank_of(self, users: np.ndarray) -> np.ndarray:
+        return self._query().rank_of(users)
+
+
+class PsiService(RankedQueries):
     """Maintains ψ-scores for a mutable (graph, activity) pair.
 
     Args:
@@ -104,6 +135,16 @@ class PsiService:
         self._last: PsiResult | None = None
         self._cache: RankingCache | None = None
 
+    @classmethod
+    def from_fleet(cls, fleet, tenant_id: str):
+        """A single-tenant serving view over a fleet lane.
+
+        Returns a :class:`~repro.serving.fleet.TenantView` — the same
+        query/mutation surface as a ``PsiService`` but solved inside the
+        fleet's vmapped batch (so one device amortizes across tenants).
+        """
+        return fleet.view(tenant_id)
+
     # -- queries -------------------------------------------------------- #
     @property
     def backend(self) -> str:
@@ -116,19 +157,6 @@ class PsiService:
     @property
     def graph(self) -> Graph:
         return self._engine.graph
-
-    def scores(self) -> np.ndarray:
-        return self._query().psi
-
-    def scores_batch(self, users: np.ndarray) -> np.ndarray:
-        """ψ for a batch of users (no ranking sort paid)."""
-        return self._query().scores_batch(users)
-
-    def top_k(self, k: int) -> tuple[np.ndarray, np.ndarray]:
-        return self._query().top_k(k)
-
-    def rank_of(self, users: np.ndarray) -> np.ndarray:
-        return self._query().rank_of(users)
 
     def last_iterations(self) -> int:
         self._query()

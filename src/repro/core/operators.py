@@ -223,6 +223,16 @@ class HostOperators:
     def activity(self) -> Activity:
         return Activity(self.lam.copy(), self.mu.copy())
 
+    def cd(self) -> tuple[np.ndarray, np.ndarray]:
+        """The paper's c = μ/(λ+μ), d = λ/(λ+μ) with silent-user masking —
+        the one place the zero-total reciprocal rule lives (the fleet's
+        padded lane arrays reuse it)."""
+        total = self.lam + self.mu
+        with np.errstate(divide="ignore", invalid="ignore"):
+            c = np.where(total > 0, self.mu / total, 0.0)
+            d = np.where(total > 0, self.lam / total, 0.0)
+        return c, d
+
     def graph(self) -> Graph:
         """Rebuild a Graph view (src-sorted order, already deduped)."""
         return Graph(self.n, self.src_by_src.copy(), self.dst_by_src.copy())
@@ -292,10 +302,7 @@ class HostOperators:
     def _node_arrays(self, dtype) -> dict:
         """The O(N) activity-derived device vectors (not the edge indices)."""
         np_dtype = np.dtype(jnp.dtype(dtype).name)
-        total = self.lam + self.mu
-        with np.errstate(divide="ignore", invalid="ignore"):
-            c = np.where(total > 0, self.mu / total, 0.0)
-            d = np.where(total > 0, self.lam / total, 0.0)
+        c, d = self.cd()
         return dict(
             lam=jnp.asarray(self.lam.astype(np_dtype)),
             mu=jnp.asarray(self.mu.astype(np_dtype)),

@@ -42,7 +42,8 @@ from ..graphs.structure import Graph
 from .formats import build_bsr, build_edge_tiles
 
 __all__ = ["RegimePlan", "PlanCache", "PLAN_CACHE", "graph_fingerprint",
-           "estimate_edge_tile_cost", "estimate_bsr_cost", "plan_regime"]
+           "bucket_fingerprint", "estimate_edge_tile_cost",
+           "estimate_bsr_cost", "plan_regime", "plan_for_bucket"]
 
 
 # Default candidate spaces. Lane dims stay multiples of 128 (TPU tiling);
@@ -128,6 +129,16 @@ def graph_fingerprint(graph: Graph, *, sample: int = 64) -> tuple:
     stride = max(1, graph.m // sample)
     return (graph.n, graph.m, tuple(np.asarray(src[::stride]).tolist()),
             tuple(np.asarray(dst[::stride]).tolist()))
+
+
+def bucket_fingerprint(n_pad: int, e_pad: int, *, extra: tuple = ()) -> tuple:
+    """Cache key for a fleet *bucket*: the padded shape, not any one graph.
+
+    Every tenant admitted into the same ``(n_pad, e_pad)`` bucket shares a
+    compiled batched solver, so they should share one plan too — the key
+    deliberately ignores which member graph happened to trigger planning.
+    """
+    return ("bucket", int(n_pad), int(e_pad)) + extra
 
 
 class PlanCache:
@@ -239,6 +250,42 @@ def plan_regime(graph: Graph, *, microbench: bool = False,
     else:
         plan = min(candidates, key=lambda p: p.est_bytes)
 
+    if cache is not None:
+        cache.store(key, plan)
+    return plan
+
+
+def plan_for_bucket(graph: Graph, *, n_pad: int, e_pad: int,
+                    microbench: bool = False, dtype=None,
+                    interpret: bool | None = None,
+                    edge_tile_candidates=EDGE_TILE_CANDIDATES,
+                    cache: PlanCache | None = PLAN_CACHE) -> RegimePlan:
+    """Plan the edge-tile parameters for one fleet bucket shape.
+
+    ``graph`` is the member that triggered planning; it is re-padded to the
+    bucket's node capacity so the plan reflects the shapes the batched
+    solver will actually compile for.  The result is memoized under
+    :func:`bucket_fingerprint` — **every** same-bucket tenant (current and
+    future) reuses this one plan, which is what keeps admission O(tenant)
+    instead of O(replan).
+
+    Only edge-tile candidates are scored: the fleet vmaps the edge-tile
+    kernel across lanes, and BSR's per-graph block table does not stack.
+    """
+    key = None
+    if cache is not None:
+        key = bucket_fingerprint(
+            n_pad, e_pad,
+            extra=(bool(microbench), tuple(edge_tile_candidates)))
+        hit = cache.lookup(key)
+        if hit is not None:
+            return hit
+    padded = Graph(int(n_pad), graph.src, graph.dst,
+                   name=f"{graph.name}@bucket{n_pad}")
+    plan = plan_regime(padded, microbench=microbench, dtype=dtype,
+                       interpret=interpret,
+                       edge_tile_candidates=edge_tile_candidates,
+                       bsr_candidates=(), cache=None)
     if cache is not None:
         cache.store(key, plan)
     return plan

@@ -26,7 +26,8 @@ import numpy as np
 
 from ..graphs.structure import Graph
 
-__all__ = ["EdgeTileFormat", "BsrFormat", "build_edge_tiles", "build_bsr"]
+__all__ = ["EdgeTileFormat", "BsrFormat", "build_edge_tiles", "build_bsr",
+           "pad_edge_tile_blocks"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +90,44 @@ def build_edge_tiles(graph: Graph, *, tile: int = 256, e1: int = 8,
                           src_idx=src_idx, dst_local=dst_local,
                           block_tile=block_tile, block_first=first,
                           block_last=last, num_tiles=num_tiles)
+
+
+def pad_edge_tile_blocks(fmt: EdgeTileFormat,
+                         num_blocks: int) -> EdgeTileFormat:
+    """Grow a format to exactly ``num_blocks`` blocks with inert padding.
+
+    The multi-tenant fleet (:mod:`repro.serving`) stacks one format per
+    tenant along a lane axis, which requires every member of a bucket to
+    share the block count.  Padding appends all-sentinel blocks
+    (``src_idx == n`` gathers the zero slot, so they scatter nothing) to
+    the *last* node tile and moves that tile's ``block_last`` flag onto the
+    final pad block — the tile's epilogue then runs after the inert blocks
+    have accumulated zeros, leaving the kernel's output and gap unchanged.
+    """
+    extra = num_blocks - fmt.num_blocks
+    if extra < 0:
+        raise ValueError(f"format already has {fmt.num_blocks} blocks "
+                         f"> requested {num_blocks}")
+    if extra == 0:
+        return fmt
+    pad_shape = (extra, fmt.e1, fmt.e2)
+    src_idx = np.concatenate(
+        [fmt.src_idx, np.full(pad_shape, fmt.n, np.int32)])
+    dst_local = np.concatenate(
+        [fmt.dst_local, np.zeros(pad_shape, np.int32)])
+    last_tile = fmt.num_tiles - 1
+    block_tile = np.concatenate(
+        [fmt.block_tile, np.full(extra, last_tile, np.int32)])
+    block_first = np.concatenate(
+        [fmt.block_first, np.zeros(extra, np.int32)])
+    block_last = np.concatenate(
+        [fmt.block_last, np.zeros(extra, np.int32)])
+    block_last[block_tile == last_tile] = 0
+    block_last[-1] = 1
+    return dataclasses.replace(fmt, src_idx=src_idx, dst_local=dst_local,
+                               block_tile=block_tile,
+                               block_first=block_first,
+                               block_last=block_last)
 
 
 @dataclasses.dataclass(frozen=True)

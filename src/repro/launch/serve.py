@@ -12,16 +12,86 @@ import time
 import numpy as np
 
 
+def _serve_fleet(args) -> None:
+    """Multi-tenant ψ serving: K tenants on one TenantFleet, the request
+    loop routed round-robin across them (docs/SERVING.md)."""
+    from ..core import heterogeneous
+    from ..graphs import clustered_blocks, powerlaw_configuration
+    from ..serving import BucketPolicy, TenantFleet
+
+    policy = (BucketPolicy.from_spec(args.bucket_sizes)
+              if args.bucket_sizes else BucketPolicy())
+    backend = args.backend or "auto"
+    if backend not in ("auto", "dense", "reference", "pallas"):
+        raise SystemExit(f"--tenants needs a fleet backend "
+                         f"(auto|dense|reference|pallas); got {backend!r}")
+    if args.accelerate:
+        raise SystemExit("--accelerate is not supported with --tenants > 1 "
+                         "(the fleet's masked batch loop has no Aitken "
+                         "composition yet)")
+    fleet = TenantFleet(backend=backend, tol=1e-8, policy=policy,
+                        check_every=args.check_every,
+                        microbench=args.microbench)
+    tids = []
+    t0 = time.perf_counter()
+    for k in range(args.tenants):
+        if k % 2 == 0:                        # alternate graph regimes
+            g = powerlaw_configuration(2_000, 12_000, seed=100 + k)
+        else:
+            g = clustered_blocks(1_024, 10_000, block=128, p_in=0.9,
+                                 seed=100 + k)
+        act = heterogeneous(g.n, seed=200 + k)
+        tid = f"tenant{k}"
+        spec = fleet.admit(tid, g, act)
+        tids.append(tid)
+        print(f"[serve] admitted {tid}: n={g.n} m={g.m} → {spec}")
+    fleet.solve()
+    print(f"[serve] fleet[{fleet.backend}] warm in "
+          f"{time.perf_counter() - t0:.2f}s; occupancy:")
+    for spec, acct in fleet.occupancy().items():
+        print(f"[serve]   {spec}: {acct['tenants']} tenants "
+              f"regime={acct['regime']} "
+              f"node_occ={acct['node_occupancy']:.2f} "
+              f"edge_occ={acct['edge_occupancy']:.2f}")
+    frontier = fleet.frontier
+    rng = np.random.default_rng(0)
+    for r in range(args.requests):
+        tid = tids[r % len(tids)]             # round-robin across tenants
+        n = fleet.stats(tid)["n"]
+        users = rng.integers(0, n, args.batch)
+        t0 = time.perf_counter()
+        scores = frontier.scores_batch([tid] * args.batch, users)
+        top, _ = frontier.top_k(tid, args.top_k)
+        print(f"[serve] req {r} → {tid}: users={users.tolist()} "
+              f"psi={np.round(scores, 8).tolist()} "
+              f"top-{args.top_k}={top.tolist()} "
+              f"({(time.perf_counter() - t0) * 1e3:.1f} ms)")
+        if r == args.requests // 2:           # live update mid-traffic
+            u = int(users[0])
+            t0 = time.perf_counter()
+            fleet.patch_activity(tid, np.asarray([u]), lam=np.asarray([5.0]))
+            fleet.solve()
+            print(f"[serve] delta update {tid} user {u}: re-converged in "
+                  f"{fleet.stats(tid)['iterations']} warm iterations "
+                  f"({(time.perf_counter() - t0) * 1e3:.1f} ms); "
+                  f"co-tenant lanes untouched")
+    top = frontier.global_top_k(args.top_k)
+    print(f"[serve] fleet-wide top-{args.top_k}: "
+          + ", ".join(f"{t}/{u}@{s:.2e}" for t, u, s in top))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen-len", type=int, default=8)
-    ap.add_argument("--backend", default="reference",
+    ap.add_argument("--backend", default=None,
                     help="ψ solver backend (see repro.core.engine): "
                          "reference | pallas | auto | accelerated | "
-                         "distributed")
+                         "distributed (default reference); with "
+                         "--tenants > 1 a fleet regime: auto | dense | "
+                         "reference | pallas (default auto)")
     ap.add_argument("--accelerate", action="store_true",
                     help="wrap the backend's step in the Aitken-"
                          "extrapolated loop (docs/AUTOTUNE.md)")
@@ -31,6 +101,14 @@ def main() -> None:
     ap.add_argument("--microbench", action="store_true",
                     help="auto backend: time one step of every regime "
                          "candidate instead of trusting the cost model")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="psi-score only: serve K independent (graph, "
+                         "activity) tenants from one TenantFleet "
+                         "(docs/SERVING.md); 1 keeps the single-tenant "
+                         "PsiService path")
+    ap.add_argument("--bucket-sizes", default=None,
+                    help="comma list of node-capacity rungs for the fleet "
+                         "bucket policy, e.g. '512,2048,8192'")
     ap.add_argument("--top-k", type=int, default=3)
     args = ap.parse_args()
 
@@ -41,15 +119,20 @@ def main() -> None:
     entry = get_arch(args.arch)
     mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
 
+    if entry.family == "psi" and args.tenants > 1:
+        _serve_fleet(args)
+        return
+
     if entry.family == "psi":
         from ..graphs import powerlaw_configuration
         from ..core import heterogeneous, PsiService
         g = powerlaw_configuration(10_000, 70_000, seed=5)
         act = heterogeneous(g.n, seed=6)
         t0 = time.perf_counter()
+        backend = args.backend or "reference"
         engine_opts = {"microbench": True} if (
-            args.backend == "auto" and args.microbench) else None
-        svc = PsiService(g, act, tol=1e-8, backend=args.backend,
+            backend == "auto" and args.microbench) else None
+        svc = PsiService(g, act, tol=1e-8, backend=backend,
                          accelerate=args.accelerate,
                          check_every=args.check_every,
                          engine_opts=engine_opts)

@@ -1,0 +1,14 @@
+"""Multi-tenant batched ψ-score serving (see docs/SERVING.md).
+
+``TenantFleet`` multiplexes many independent (graph, activity) tenants onto
+one device: tenants are size-bucketed into padded batches
+(:mod:`repro.serving.bucket`), each bucket solves as one vmapped
+convergence-masked Power-ψ loop (:mod:`repro.serving.fleet`), and queries go
+through the cross-tenant ranking frontier (:mod:`repro.serving.frontier`).
+"""
+from .bucket import BucketPolicy, BucketSpec
+from .fleet import TenantFleet, TenantView
+from .frontier import FleetRankingCache
+
+__all__ = ["BucketPolicy", "BucketSpec", "TenantFleet", "TenantView",
+           "FleetRankingCache"]

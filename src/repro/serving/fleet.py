@@ -1,0 +1,721 @@
+"""TenantFleet: many (graph, activity) tenants multiplexed onto one device.
+
+The single-tenant serving story (:class:`repro.core.incremental.PsiService`)
+leaves the device idle between solves; a platform scoring many communities /
+topics at once wants the opposite — one resident solver amortized across a
+*fleet* of independent tenants.  The fleet gets there in three moves:
+
+1. **Size-bucketing** (:mod:`repro.serving.bucket`): tenants are padded to a
+   small ladder of ``(n_pad, e_pad)`` capacities so same-bucket operator
+   arrays stack along a lane axis.  Pad nodes carry zero rates and pad edges
+   point at the out-of-range sentinel the segment-sum drops — inert by
+   construction.
+2. **Vmapped masked iteration**: one bucket solves as a single
+   :func:`repro.core.engine.make_batched_loop` call — the backend's pure
+   ``one_step`` vmapped over lanes inside one ``lax.while_loop``, each lane
+   honoring the solo convergence rule.  A converged lane *freezes bitwise*
+   (``jnp.where`` keeps its series vector) while neighbours keep stepping;
+   lanes that were already clean when the solve started never move at all.
+3. **Warm-state continuity**: every mutation goes through the tenant's own
+   O(Δ) :class:`~repro.core.operators.HostOperators` mirror, re-solves warm
+   from the previous fixed point, and — when edge growth escapes the bucket
+   — the tenant *rebuckets* into the next capacity rung carrying its series
+   vector along, so even a migration re-converges in a handful of
+   iterations.
+
+Three batched execution regimes are supported — ``dense`` (per-lane {0,1}
+adjacency consumed as one batched GEMV: BLAS on CPU, MXU on TPU — the clear
+winner for buckets of *small* tenants, where B independent gather/scatter
+pipelines lose to a single ``[B, n, n]`` matvec), ``reference`` (vmapped
+edge-form segment-sum — works everywhere, any dtype, O(m) memory) and
+``pallas`` (the fused edge-tile kernel vmapped across lanes; tile
+parameters planned once per *bucket shape* via
+:func:`repro.kernels.autotune.plan_for_bucket` and shared by every
+same-bucket tenant).  ``auto`` picks per bucket: ``dense`` under the
+``dense_max_n`` memory threshold, otherwise ``pallas`` on TPU /
+``reference`` elsewhere.  Queries go through
+:class:`repro.serving.frontier.FleetRankingCache`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from ..core.activity import Activity
+from ..core.engine import (make_batched_loop, make_dense_step,
+                           make_edge_tile_step, make_reference_step)
+from ..core.incremental import RankedQueries
+from ..core.operators import HostOperators, PsiOperators
+from ..graphs.structure import Graph
+from .bucket import BucketPolicy, BucketSpec
+
+__all__ = ["TenantFleet", "TenantView"]
+
+_BACKENDS = ("auto", "dense", "reference", "pallas")
+
+
+@dataclasses.dataclass
+class _Tenant:
+    """Host-side record of one admitted tenant."""
+
+    tid: str
+    host: HostOperators
+    n: int
+    spec: BucketSpec
+    epoch: int = 0              # bumped on every mutation
+    solved_epoch: int = -1      # epoch the stored ψ corresponds to
+    s_host: np.ndarray | None = None   # node-order warm start, length n
+    psi: np.ndarray | None = None
+    iterations: int = 0
+    gap: float = float("inf")
+    converged: bool = False
+    rebuckets: int = 0
+
+    @property
+    def staleness(self) -> int:
+        return self.epoch - self.solved_epoch if self.solved_epoch >= 0 \
+            else self.epoch + 1
+
+
+@dataclasses.dataclass
+class _Bucket:
+    """Device-side batch of one bucket shape (lane order = ``order``)."""
+
+    spec: BucketSpec
+    regime: str = ""                           # resolved at stack time
+    order: list = dataclasses.field(default_factory=list)
+    restack: bool = True                       # membership/shape changed
+    refresh: dict = dataclasses.field(default_factory=dict)  # tid → kind
+    args: Any = None                           # batched step args
+    s: Any = None                              # batched native state
+    scale: Any = None                          # f[B] per-lane ‖B‖
+    inv_n: Any = None                          # f[B] 1/n_real (0 on pads)
+    lam: Any = None                            # epilogue vectors
+    d: Any = None                              # (dense / pallas regimes)
+    nb: int = 0                                # pallas block capacity
+    plan: Any = None
+
+
+class TenantFleet:
+    """Admit / evict / patch tenants; solve them in vmapped batches.
+
+    Args:
+      backend: ``dense`` (batched GEMV — small buckets), ``reference``
+        (vmapped segment-sum), ``pallas`` (vmapped fused edge-tile kernel)
+        or ``auto`` (per-bucket choice under ``dense_max_n``).
+      tol / max_iter: shared convergence criterion (Eq. 19 rule with the
+        per-tenant ‖B‖ scale unless ``use_b_norm=False``).
+      policy: the :class:`BucketPolicy` sizing ladder.
+      check_every: gap-evaluation cadence of the batched loop.
+      dense_max_n: largest ``n_pad`` the ``auto`` backend will run dense
+        (O(n²) lane memory is the constraint).
+      microbench: time edge-tile candidates when planning a bucket
+        (``pallas`` regime) instead of trusting the cost model.
+      tile / e1 / e2: explicit edge-tile parameters (skip planning).
+      plan_cache: override the process-level autotune plan cache.
+    """
+
+    def __init__(self, *, backend: str = "auto", tol: float = 1e-8,
+                 max_iter: int = 10_000, dtype=None,
+                 policy: BucketPolicy | None = None, norm: str = "l1",
+                 use_b_norm: bool = True, check_every: int = 1,
+                 dense_max_n: int = 1024, interpret: bool | None = None,
+                 microbench: bool = False, tile: int | None = None,
+                 e1: int | None = None, e2: int | None = None,
+                 plan_cache=None):
+        import jax.numpy as jnp
+        if backend not in _BACKENDS:
+            raise ValueError(f"unknown fleet backend {backend!r}; "
+                             f"available: {_BACKENDS}")
+        if backend in ("pallas", "auto") and norm != "l1":
+            raise ValueError("the pallas regime computes its gap in l1; "
+                             f"got norm={norm!r}")
+        self.backend = backend
+        self.norm = norm
+        self.tol = float(tol)
+        self.max_iter = int(max_iter)
+        self.dtype = dtype or jnp.float32
+        self._np_dtype = np.dtype(jnp.dtype(self.dtype).name)
+        self.policy = policy or BucketPolicy()
+        self.use_b_norm = bool(use_b_norm)
+        self.check_every = int(check_every)
+        self.dense_max_n = int(dense_max_n)
+        self.microbench = bool(microbench)
+        self._tile_override = ((tile, e1, e2)
+                               if None not in (tile, e1, e2) else None)
+        self._plan_cache = plan_cache
+        if interpret is None:
+            from ..kernels.ops import default_interpret
+            interpret = default_interpret()
+        self.interpret = bool(interpret)
+        self._machinery: dict[str, tuple] = {}   # regime → (loop, epilogue)
+        self._tenants: dict[str, _Tenant] = {}
+        self._buckets: dict[BucketSpec, _Bucket] = {}
+        self._frontier = None
+        self.solves = 0                  # batched loop launches
+        self.lane_solves = 0             # lanes actually iterated
+
+    # -- regime machinery ------------------------------------------------ #
+    def _regime_for(self, spec: BucketSpec) -> str:
+        if self.backend != "auto":
+            return self.backend
+        if spec.n_pad <= self.dense_max_n:
+            return "dense"
+        import jax
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+    def _loop_and_epilogue(self, regime: str) -> tuple:
+        """The (batched loop, batched epilogue) pair of one regime, built
+        lazily and shared by every bucket the regime serves."""
+        import jax
+        if regime in self._machinery:
+            return self._machinery[regime]
+        if regime == "reference":
+            one_step = make_reference_step(self.norm)
+
+            def _epi(ops, s, lam, d, inv_n):
+                return (lam * ops.push(s) + d) * inv_n
+        elif regime == "dense":
+            one_step = make_dense_step(self.norm)
+
+            def _epi(args, s, lam, d, inv_n):
+                E, inv_w, _, _ = args
+                return (lam * ((s * inv_w) @ E) + d) * inv_n
+        else:
+            one_step = make_edge_tile_step(self.interpret)
+            interp = self.interpret
+
+            def _epi(args, s, lam, d, inv_n):
+                from ..kernels.ops import edge_spmv
+                fmt, inv_w_g, _, _ = args
+                s_pre = s[0, :fmt.n] * inv_w_g[0, :fmt.n]
+                t = edge_spmv(s_pre, fmt, interpret=interp)
+                return (lam * t + d) * inv_n
+
+        pair = (make_batched_loop(one_step, check_every=self.check_every),
+                jax.jit(jax.vmap(_epi)))
+        self._machinery[regime] = pair
+        return pair
+
+    # -- introspection --------------------------------------------------- #
+    def __len__(self) -> int:
+        return len(self._tenants)
+
+    def __contains__(self, tenant_id: str) -> bool:
+        return tenant_id in self._tenants
+
+    @property
+    def tenant_ids(self) -> tuple[str, ...]:
+        return tuple(self._tenants)
+
+    @property
+    def frontier(self):
+        """The cross-tenant query layer (lazily constructed)."""
+        if self._frontier is None:
+            from .frontier import FleetRankingCache
+            self._frontier = FleetRankingCache(self)
+        return self._frontier
+
+    def view(self, tenant_id: str) -> "TenantView":
+        """A PsiService-shaped single-tenant view (see TenantView)."""
+        self._rec(tenant_id)
+        return TenantView(self, tenant_id)
+
+    def spec_of(self, tenant_id: str) -> BucketSpec:
+        return self._rec(tenant_id).spec
+
+    def stats(self, tenant_id: str) -> dict:
+        r = self._rec(tenant_id)
+        return dict(n=r.n, m=r.host.m, spec=r.spec, epoch=r.epoch,
+                    solved_epoch=r.solved_epoch, staleness=r.staleness,
+                    iterations=r.iterations, gap=r.gap,
+                    converged=r.converged, rebuckets=r.rebuckets)
+
+    def occupancy(self) -> dict:
+        """Per-bucket padding accounting (see BucketPolicy.occupancy)."""
+        out = {}
+        for spec, bucket in sorted(self._buckets.items()):
+            pairs = [(self._tenants[t].n, self._tenants[t].host.m)
+                     for t in bucket.order]
+            acct = self.policy.occupancy(spec, pairs)
+            acct["regime"] = bucket.regime or self._regime_for(spec)
+            if bucket.plan is not None:
+                acct["plan"] = bucket.plan.params()
+            out[spec] = acct
+        return out
+
+    # -- tenant lifecycle ------------------------------------------------ #
+    def admit(self, tenant_id: str, graph: Graph, activity: Activity, *,
+              s0: np.ndarray | None = None) -> BucketSpec:
+        """Register a tenant; it solves lazily at the next query/solve.
+
+        ``s0`` optionally warm-starts the first solve (e.g. a series vector
+        migrated from another fleet or a solo engine's ``PsiResult.s``).
+
+        The graph is deduped on the way in (the paper's model has neither
+        self-loops nor multi-edges, and the execution regimes would
+        otherwise disagree on duplicate counting — the dense adjacency is
+        {0,1} while the edge form sums every occurrence).
+        """
+        if tenant_id in self._tenants:
+            raise ValueError(f"tenant {tenant_id!r} already admitted")
+        graph = graph.dedup()
+        host = HostOperators.from_graph(graph, activity)
+        spec = self.policy.bucket_for(graph.n, graph.m)
+        rec = _Tenant(tid=tenant_id, host=host, n=graph.n, spec=spec)
+        if s0 is not None:
+            s0 = np.asarray(s0, self._np_dtype).reshape(-1)
+            if s0.shape != (graph.n,):
+                raise ValueError(f"s0 must be f[{graph.n}]; got {s0.shape}")
+            rec.s_host = s0.copy()
+        self._tenants[tenant_id] = rec
+        self._join_bucket(rec)
+        return spec
+
+    def evict(self, tenant_id: str) -> np.ndarray | None:
+        """Drop a tenant; returns its last ψ (None if never solved)."""
+        rec = self._rec(tenant_id)
+        self._leave_bucket(rec)
+        del self._tenants[tenant_id]
+        if self._frontier is not None:
+            self._frontier.drop(tenant_id)
+        return rec.psi
+
+    def patch_activity(self, tenant_id: str, users, lam=None,
+                       mu=None) -> None:
+        """O(Δ) λ/μ patch on one tenant; its lane re-solves warm."""
+        rec = self._rec(tenant_id)
+        rec.host.patch_activity(np.asarray(users), lam=lam, mu=mu)
+        self._mark_dirty(rec, "activity")
+
+    def patch_edges(self, tenant_id: str, src, dst) -> None:
+        """Edge insert on one tenant; rebuckets when growth escapes the
+        bucket's edge capacity (warm state migrates with the tenant)."""
+        rec = self._rec(tenant_id)
+        kept_src, _ = rec.host.patch_edges(np.asarray(src, np.int32),
+                                           np.asarray(dst, np.int32))
+        if kept_src.size == 0:
+            return
+        if self.policy.needs_rebucket(rec.spec, rec.n, rec.host.m):
+            self._leave_bucket(rec)
+            rec.spec = self.policy.bucket_for(rec.n, rec.host.m)
+            rec.rebuckets += 1
+            rec.epoch += 1
+            self._join_bucket(rec)
+        else:
+            self._mark_dirty(rec, "edges")
+
+    def invalidate(self) -> None:
+        """Forget all solver state: the next solve is cold (s₀ = c).
+
+        The stacked device operators are kept — only the iterate resets —
+        so a post-invalidate solve measures pure solver work, exactly like
+        a solo engine's cold ``run()`` over prebuilt operators.
+        """
+        for bucket in self._buckets.values():
+            if bucket.args is not None and not bucket.restack \
+                    and not bucket.refresh:
+                bucket.s = self._cold_state(bucket)
+            else:
+                # pending lane refreshes (or no stack at all): the kept
+                # args would be stale — rebuild from the host mirrors
+                bucket.restack = True
+                bucket.args = bucket.s = None
+            bucket.refresh.clear()
+        for rec in self._tenants.values():
+            rec.s_host = None
+            rec.solved_epoch = -1
+
+    def _cold_state(self, bucket: _Bucket):
+        """The batched cold-start iterate s₀ = c in the regime's layout."""
+        if bucket.regime == "reference":
+            return bucket.args.c
+        return bucket.args[3]          # dense: c vectors; pallas: c_pad
+
+    # -- solving --------------------------------------------------------- #
+    def solve(self, *, force: bool = False) -> int:
+        """Re-solve every bucket with a stale tenant; returns lanes run.
+
+        Per bucket this is ONE vmapped masked loop launch: dirty lanes
+        iterate from their warm state, clean lanes are masked inactive and
+        stay bitwise frozen (their recomputed ψ is bit-identical).
+        """
+        import jax.numpy as jnp
+        ran = 0
+        for spec in sorted(self._buckets):
+            bucket = self._buckets[spec]
+            recs = [self._tenants[t] for t in bucket.order]
+            dirty = [r.solved_epoch < r.epoch for r in recs]
+            if not (any(dirty) or force):
+                continue
+            if bucket.restack:
+                self._stack_bucket(bucket)
+            elif bucket.refresh:
+                self._apply_refresh(bucket)
+                if bucket.restack:          # refresh escalated (block growth)
+                    self._stack_bucket(bucket)
+            loop, _ = self._loop_and_epilogue(bucket.regime)
+            lanes = bucket.s.shape[0]
+            active0 = np.zeros(lanes, bool)
+            active0[:len(recs)] = [d or force for d in dirty]
+            s, gap, t = loop(
+                bucket.args, bucket.s, bucket.scale,
+                jnp.asarray(self.tol, self.dtype),
+                jnp.asarray(self.max_iter, jnp.int32), jnp.asarray(active0))
+            bucket.s = s
+            psi = np.asarray(self._run_epilogue(bucket))
+            gap, t = np.asarray(gap), np.asarray(t)
+            for lane, rec in enumerate(recs):
+                if active0[lane]:
+                    # clean lanes keep their stored ψ untouched (their
+                    # frozen iterate would reproduce it bit-for-bit anyway)
+                    rec.psi = psi[lane, :rec.n].copy()
+                    rec.iterations = int(t[lane])
+                    rec.gap = float(gap[lane])
+                    rec.converged = rec.gap <= self.tol
+                    ran += 1
+                rec.solved_epoch = rec.epoch
+            self.solves += 1
+        self.lane_solves += ran
+        return ran
+
+    def psi(self, tenant_id: str) -> np.ndarray:
+        """This tenant's ψ vector (solving first if anything is stale)."""
+        self.solve()
+        return self._rec(tenant_id).psi
+
+    def series(self, tenant_id: str) -> np.ndarray | None:
+        """The tenant's current node-order series vector s (warm state)."""
+        rec = self._rec(tenant_id)
+        self._sync_bucket(self._buckets[rec.spec])
+        return rec.s_host
+
+    def last_iterations(self, tenant_id: str) -> int:
+        self.solve()
+        return self._rec(tenant_id).iterations
+
+    # -- internals: bookkeeping ------------------------------------------ #
+    def _rec(self, tenant_id: str) -> _Tenant:
+        try:
+            return self._tenants[tenant_id]
+        except KeyError:
+            raise KeyError(f"unknown tenant {tenant_id!r}; admitted: "
+                           f"{sorted(self._tenants)}") from None
+
+    def _mark_dirty(self, rec: _Tenant, kind: str) -> None:
+        rec.epoch += 1
+        bucket = self._buckets[rec.spec]
+        if not bucket.restack:
+            prev = bucket.refresh.get(rec.tid)
+            bucket.refresh[rec.tid] = ("edges" if "edges" in (kind, prev)
+                                       else kind)
+
+    def _join_bucket(self, rec: _Tenant) -> None:
+        bucket = self._buckets.get(rec.spec)
+        if bucket is None:
+            bucket = self._buckets[rec.spec] = _Bucket(spec=rec.spec)
+        self._invalidate_stack(bucket)
+        bucket.order.append(rec.tid)
+
+    def _leave_bucket(self, rec: _Tenant) -> None:
+        bucket = self._buckets[rec.spec]
+        self._invalidate_stack(bucket)
+        bucket.order.remove(rec.tid)
+        bucket.refresh.pop(rec.tid, None)
+        if not bucket.order:
+            del self._buckets[rec.spec]
+
+    def _invalidate_stack(self, bucket: _Bucket) -> None:
+        """Membership is changing: preserve warm states, drop device batch."""
+        self._sync_bucket(bucket)
+        bucket.restack = True
+        bucket.refresh.clear()
+        bucket.args = bucket.s = None
+
+    def _sync_bucket(self, bucket: _Bucket) -> None:
+        """Pull each lane's series vector back to its tenant record."""
+        if bucket.s is None:
+            return
+        s_node = np.asarray(self._node_order(bucket))
+        for lane, tid in enumerate(bucket.order):
+            rec = self._tenants[tid]
+            rec.s_host = s_node[lane, :rec.n].copy()
+
+    def _node_order(self, bucket: _Bucket):
+        if bucket.regime == "pallas":
+            return bucket.s[:, 0, :bucket.spec.n_pad]
+        return bucket.s
+
+    # -- internals: per-tenant padded arrays ----------------------------- #
+    def _node_arrays(self, rec: _Tenant | None,
+                     n_pad: int) -> tuple[dict, float, float]:
+        """(padded node vectors, ‖B‖, 1/n) for one lane; zeros for a pad
+        lane (``rec is None``) — inert under the masked loop."""
+        names = ("lam", "mu", "inv_w", "c", "d")
+        if rec is None:
+            return ({k: np.zeros(n_pad, self._np_dtype) for k in names},
+                    0.0, 0.0)
+        h = rec.host
+        c, d = h.cd()
+        out = {}
+        for name, v in zip(names, (h.lam, h.mu, h.inv_w, c, d)):
+            buf = np.zeros(n_pad, self._np_dtype)
+            buf[:rec.n] = v
+            out[name] = buf
+        return out, float(h.b_norm), 1.0 / rec.n
+
+    def _edge_arrays(self, rec: _Tenant | None,
+                     spec: BucketSpec) -> tuple[np.ndarray, np.ndarray]:
+        """dst-sorted edges padded to e_pad; pad slots scatter out-of-range
+        (``dst == n_pad``), which the segment-sum drops."""
+        src = np.zeros(spec.e_pad, np.int32)
+        dst = np.full(spec.e_pad, spec.n_pad, np.int32)
+        if rec is not None:
+            m = rec.host.m
+            src[:m] = rec.host.src_by_dst
+            dst[:m] = rec.host.dst_by_dst
+        return src, dst
+
+    def _lane_s0(self, rec: _Tenant | None, node: dict,
+                 n_pad: int) -> np.ndarray:
+        if rec is None or rec.s_host is None:
+            return node["c"]                    # cold start: s₀ = c
+        buf = np.zeros(n_pad, self._np_dtype)
+        buf[:rec.n] = rec.s_host.astype(self._np_dtype)
+        return buf
+
+    # -- internals: stacking --------------------------------------------- #
+    def _stack_bucket(self, bucket: _Bucket) -> None:
+        import jax.numpy as jnp
+        spec = bucket.spec
+        bucket.regime = self._regime_for(spec)
+        recs: list[_Tenant | None] = [self._tenants[t] for t in bucket.order]
+        recs += [None] * (self.policy.lanes_padded(len(recs)) - len(recs))
+        nodes, b_norms, inv_ns, s0s = [], [], [], []
+        for rec in recs:
+            node, b_norm, inv_n = self._node_arrays(rec, spec.n_pad)
+            nodes.append(node)
+            b_norms.append(b_norm)
+            inv_ns.append(inv_n)
+            s0s.append(self._lane_s0(rec, node, spec.n_pad))
+        bucket.inv_n = jnp.asarray(np.asarray(inv_ns, self._np_dtype))
+        bucket.scale = (jnp.asarray(np.asarray(b_norms, self._np_dtype))
+                        if self.use_b_norm
+                        else jnp.ones(len(recs), self.dtype))
+        bucket.lam = jnp.asarray(np.stack([n["lam"] for n in nodes]))
+        bucket.d = jnp.asarray(np.stack([n["d"] for n in nodes]))
+        if bucket.regime == "reference":
+            self._stack_reference(bucket, recs, nodes, s0s)
+        elif bucket.regime == "dense":
+            self._stack_dense(bucket, recs, nodes, s0s)
+        else:
+            self._stack_pallas(bucket, recs, nodes, s0s)
+        bucket.restack = False
+        bucket.refresh.clear()
+
+    def _stack_reference(self, bucket, recs, nodes, s0s) -> None:
+        import jax.numpy as jnp
+        spec = bucket.spec
+        edges = [self._edge_arrays(rec, spec) for rec in recs]
+        src = jnp.asarray(np.stack([e[0] for e in edges]))
+        dst = jnp.asarray(np.stack([e[1] for e in edges]))
+        stacked = {k: jnp.asarray(np.stack([n[k] for n in nodes]))
+                   for k in nodes[0]}
+        # the by-src views alias the by-dst arrays: the batched step and
+        # epilogue only ever use the dst-sorted scatter
+        bucket.args = PsiOperators(
+            n=spec.n_pad, m=spec.e_pad, src_by_dst=src, dst_by_dst=dst,
+            src_by_src=src, dst_by_src=dst, b_norm=bucket.scale, **stacked)
+        bucket.s = jnp.asarray(np.stack(s0s))
+
+    def _dense_adjacency(self, rec: _Tenant | None,
+                         n_pad: int) -> np.ndarray:
+        E = np.zeros((n_pad, n_pad), self._np_dtype)
+        if rec is not None:
+            E[rec.host.src_by_dst, rec.host.dst_by_dst] = 1.0
+        return E
+
+    def _stack_dense(self, bucket, recs, nodes, s0s) -> None:
+        import jax.numpy as jnp
+        spec = bucket.spec
+        E = jnp.asarray(np.stack(
+            [self._dense_adjacency(rec, spec.n_pad) for rec in recs]))
+        vecs = {k: jnp.asarray(np.stack([n[k] for n in nodes]))
+                for k in ("inv_w", "mu", "c")}
+        bucket.args = (E, vecs["inv_w"], vecs["mu"], vecs["c"])
+        bucket.s = jnp.asarray(np.stack(s0s))
+
+    def _stack_pallas(self, bucket, recs, nodes, s0s) -> None:
+        import jax.numpy as jnp
+
+        from ..kernels.formats import pad_edge_tile_blocks
+        from ..kernels.ops import DeviceEdgeTiles
+        spec = bucket.spec
+        tile, e1, e2 = self._bucket_plan(bucket, recs)
+        fmts = [self._tenant_format(rec, spec, tile, e1, e2) for rec in recs]
+        nb = max(f.num_blocks for f in fmts)
+        bucket.nb = max(bucket.nb, -(-nb // 4) * 4)   # monotone, quantized
+        fmts = [pad_edge_tile_blocks(f, bucket.nb) for f in fmts]
+        data = {k: jnp.asarray(np.stack([getattr(f, k) for f in fmts]))
+                for k in ("src_idx", "dst_local", "block_tile",
+                          "block_first", "block_last")}
+        ref = DeviceEdgeTiles.from_format(fmts[0])
+        meta = {k: getattr(ref, k) for k in
+                ("n", "n_pad", "n_gather", "tile", "e1", "e2", "num_tiles")}
+        fmt = DeviceEdgeTiles(**meta, **data)
+        n_fmt, n_g = ref.n_pad, ref.n_gather
+
+        def pad_row(v, width):
+            buf = np.zeros((1, width), self._np_dtype)
+            buf[0, :v.shape[0]] = v
+            return buf
+
+        inv_w_g = jnp.asarray(np.stack(
+            [pad_row(n["inv_w"], n_g) for n in nodes]))
+        mu_pad = jnp.asarray(np.stack(
+            [pad_row(n["mu"], n_fmt) for n in nodes]))
+        c_pad = jnp.asarray(np.stack(
+            [pad_row(n["c"], n_fmt) for n in nodes]))
+        bucket.args = (fmt, inv_w_g, mu_pad, c_pad)
+        bucket.s = jnp.asarray(np.stack(
+            [pad_row(s0, n_fmt) for s0 in s0s]))
+
+    def _bucket_plan(self, bucket: _Bucket,
+                     recs) -> tuple[int, int, int]:
+        """Edge-tile parameters shared by every tenant of this bucket."""
+        if self._tile_override is not None:
+            return self._tile_override
+        if bucket.plan is None:
+            from ..kernels import autotune
+            rep = next((r for r in recs if r is not None), None)
+            graph = (rep.host.graph() if rep is not None
+                     else Graph(bucket.spec.n_pad, np.empty(0, np.int32),
+                                np.empty(0, np.int32)))
+            cache = (autotune.PLAN_CACHE if self._plan_cache is None
+                     else self._plan_cache)
+            bucket.plan = autotune.plan_for_bucket(
+                graph, n_pad=bucket.spec.n_pad, e_pad=bucket.spec.e_pad,
+                microbench=self.microbench, dtype=self.dtype,
+                interpret=self.interpret, cache=cache)
+        return bucket.plan.tile, bucket.plan.e1, bucket.plan.e2
+
+    def _tenant_format(self, rec: _Tenant | None, spec: BucketSpec,
+                       tile: int, e1: int, e2: int):
+        from ..kernels.formats import build_edge_tiles
+        if rec is None:
+            gp = Graph(spec.n_pad, np.empty(0, np.int32),
+                       np.empty(0, np.int32))
+        else:
+            gp = Graph(spec.n_pad, rec.host.src_by_dst.copy(),
+                       rec.host.dst_by_dst.copy())
+        return build_edge_tiles(gp, tile=tile, e1=e1, e2=e2)
+
+    # -- internals: lane refresh (no restack) ---------------------------- #
+    def _apply_refresh(self, bucket: _Bucket) -> None:
+        import jax.numpy as jnp
+        spec = bucket.spec
+        for tid, kind in list(bucket.refresh.items()):
+            lane = bucket.order.index(tid)
+            rec = self._tenants[tid]
+            node, b_norm, _ = self._node_arrays(rec, spec.n_pad)
+            if self.use_b_norm:
+                bucket.scale = bucket.scale.at[lane].set(b_norm)
+            bucket.lam = bucket.lam.at[lane].set(jnp.asarray(node["lam"]))
+            bucket.d = bucket.d.at[lane].set(jnp.asarray(node["d"]))
+            if bucket.regime == "reference":
+                ops = bucket.args
+                repl = {k: getattr(ops, k).at[lane].set(jnp.asarray(v))
+                        for k, v in node.items()}
+                repl["b_norm"] = bucket.scale
+                if kind == "edges":
+                    src, dst = self._edge_arrays(rec, spec)
+                    s_new = ops.src_by_dst.at[lane].set(jnp.asarray(src))
+                    d_new = ops.dst_by_dst.at[lane].set(jnp.asarray(dst))
+                    repl.update(src_by_dst=s_new, dst_by_dst=d_new,
+                                src_by_src=s_new, dst_by_src=d_new)
+                bucket.args = dataclasses.replace(ops, **repl)
+            elif bucket.regime == "dense":
+                E, inv_w, mu, c = bucket.args
+                if kind == "edges":
+                    E = E.at[lane].set(jnp.asarray(
+                        self._dense_adjacency(rec, spec.n_pad)))
+                bucket.args = (
+                    E, inv_w.at[lane].set(jnp.asarray(node["inv_w"])),
+                    mu.at[lane].set(jnp.asarray(node["mu"])),
+                    c.at[lane].set(jnp.asarray(node["c"])))
+            else:
+                fmt, inv_w_g, mu_pad, c_pad = bucket.args
+                if kind == "edges":
+                    from ..kernels.formats import pad_edge_tile_blocks
+                    tile, e1, e2 = self._bucket_plan(bucket, [rec])
+                    f = self._tenant_format(rec, spec, tile, e1, e2)
+                    if f.num_blocks > bucket.nb:
+                        # block capacity outgrown — full restack; sync the
+                        # device batch first so every lane (this one and
+                        # its clean co-tenants) restacks from its current
+                        # series vector, not a stale or cold one
+                        self._invalidate_stack(bucket)
+                        return
+                    f = pad_edge_tile_blocks(f, bucket.nb)
+                    fmt = dataclasses.replace(
+                        fmt,
+                        **{k: getattr(fmt, k).at[lane].set(
+                            jnp.asarray(getattr(f, k)))
+                           for k in ("src_idx", "dst_local", "block_tile",
+                                     "block_first", "block_last")})
+
+                def row(v, width):
+                    buf = np.zeros((1, width), self._np_dtype)
+                    buf[0, :v.shape[0]] = v
+                    return jnp.asarray(buf)
+
+                inv_w_g = inv_w_g.at[lane].set(row(node["inv_w"],
+                                                   inv_w_g.shape[-1]))
+                mu_pad = mu_pad.at[lane].set(row(node["mu"],
+                                                 mu_pad.shape[-1]))
+                c_pad = c_pad.at[lane].set(row(node["c"], c_pad.shape[-1]))
+                bucket.args = (fmt, inv_w_g, mu_pad, c_pad)
+        bucket.refresh.clear()
+
+    def _run_epilogue(self, bucket: _Bucket):
+        _, epilogue = self._loop_and_epilogue(bucket.regime)
+        return epilogue(bucket.args, bucket.s, bucket.lam, bucket.d,
+                        bucket.inv_n)
+
+
+class TenantView(RankedQueries):
+    """A PsiService-shaped thin view over one fleet tenant.
+
+    Carries the full single-tenant serving surface — ``scores`` /
+    ``scores_batch`` / ``top_k`` / ``rank_of`` plus the mutation pair
+    ``update_activity`` / ``add_edges`` — but owns no solver: every call
+    delegates to the shared fleet (and therefore batches with whatever
+    co-tenants are dirty).  Obtained via ``fleet.view(tid)`` or
+    :meth:`repro.core.incremental.PsiService.from_fleet`.
+    """
+
+    def __init__(self, fleet: TenantFleet, tenant_id: str):
+        self._fleet = fleet
+        self.tenant_id = tenant_id
+
+    @property
+    def backend(self) -> str:
+        return f"fleet[{self._fleet.backend}]"
+
+    @property
+    def graph(self) -> Graph:
+        return self._fleet._rec(self.tenant_id).host.graph()
+
+    def update_activity(self, users, lam=None, mu=None) -> None:
+        self._fleet.patch_activity(self.tenant_id, users, lam=lam, mu=mu)
+
+    def add_edges(self, src, dst) -> None:
+        self._fleet.patch_edges(self.tenant_id, src, dst)
+
+    def last_iterations(self) -> int:
+        return self._fleet.last_iterations(self.tenant_id)
+
+    def _query(self):
+        return self._fleet.frontier.ranking(self.tenant_id)

@@ -1,0 +1,466 @@
+"""TenantFleet: bucketed multi-tenant batched serving (docs/SERVING.md)."""
+import numpy as np
+import pytest
+
+from repro.core import (exact_psi, heterogeneous, make_batched_loop,
+                        make_engine, make_reference_step, PsiService)
+from repro.graphs import clustered_blocks, erdos_renyi, powerlaw_configuration
+from repro.graphs.structure import Graph
+from repro.serving import BucketPolicy, BucketSpec, TenantFleet
+
+REGIMES = ["dense", "reference", "pallas"]
+
+
+def _tenants():
+    graphs = [powerlaw_configuration(300, 1800, seed=1),
+              erdos_renyi(450, 2500, seed=2),
+              clustered_blocks(256, 2000, block=64, p_in=0.9, seed=3)]
+    acts = [heterogeneous(g.n, seed=10 + i) for i, g in enumerate(graphs)]
+    return list(zip(graphs, acts))
+
+
+@pytest.fixture(scope="module")
+def platform():
+    tenants = _tenants()
+    solo = [np.asarray(make_engine("reference", graph=g, activity=a)
+                       .run(tol=1e-8).psi) for g, a in tenants]
+    return tenants, solo
+
+
+def _fleet(backend, **kw):
+    kw.setdefault("policy", BucketPolicy((512,), edge_quantum=4096))
+    return TenantFleet(backend=backend, tol=1e-8, **kw)
+
+
+# --------------------------------------------------------------------- #
+# Parity: every regime matches the solo reference solve per tenant
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", REGIMES)
+def test_fleet_parity_with_solo_reference(platform, backend):
+    tenants, solo = platform
+    fleet = _fleet(backend)
+    for i, (g, a) in enumerate(tenants):
+        fleet.admit(f"t{i}", g, a)
+    assert fleet.solve() == len(tenants)
+    for i, (g, _) in enumerate(tenants):
+        psi = fleet.psi(f"t{i}")
+        assert psi.shape == (g.n,)
+        assert np.abs(psi - solo[i]).max() <= 1e-6
+        st = fleet.stats(f"t{i}")
+        assert st["converged"] and st["staleness"] == 0
+
+
+def test_fleet_mixed_buckets_and_occupancy(platform):
+    tenants, solo = platform
+    policy = BucketPolicy((256, 512), edge_quantum=2048)
+    fleet = TenantFleet(backend="dense", tol=1e-8, policy=policy)
+    for i, (g, a) in enumerate(tenants):
+        fleet.admit(f"t{i}", g, a)
+    fleet.solve()
+    specs = {fleet.spec_of(f"t{i}") for i in range(len(tenants))}
+    assert len(specs) > 1                        # ladder actually separates
+    assert {s.n_pad for s in specs} == {256, 512}
+    for i in range(len(tenants)):
+        assert np.abs(fleet.psi(f"t{i}") - solo[i]).max() <= 1e-6
+    occ = fleet.occupancy()
+    assert set(occ) == specs
+    for acct in occ.values():
+        assert 0 < acct["node_occupancy"] <= 1.0
+        assert 0 < acct["edge_occupancy"] <= 1.0
+        assert acct["lane_occupancy"] == 1.0
+
+
+# --------------------------------------------------------------------- #
+# Convergence masking: converged / clean lanes are bitwise frozen
+# --------------------------------------------------------------------- #
+def test_batched_loop_freezes_converged_lane():
+    """Engine-level guarantee: once a lane's criterion fires, later loop
+    iterations must not move it by a single bit."""
+    import jax.numpy as jnp
+    g_fast = erdos_renyi(200, 600, seed=4)       # converges early
+    g_slow = powerlaw_configuration(200, 1600, seed=5)
+    act = heterogeneous(200, seed=6)
+    fleet = TenantFleet(backend="reference", tol=1e-10,
+                        policy=BucketPolicy((256,), edge_quantum=2048))
+    fleet.admit("fast", g_fast, act)
+    fleet.admit("slow", g_slow, act)
+    fleet.solve()
+    t_fast = fleet.stats("fast")["iterations"]
+    t_slow = fleet.stats("slow")["iterations"]
+    assert t_fast != t_slow                      # lanes truly diverge
+    bucket = fleet._buckets[fleet.spec_of("fast")]
+    loop = make_batched_loop(make_reference_step("l1"))
+    s0 = fleet._cold_state(bucket)
+    active = jnp.ones(2, bool)
+    tol = jnp.asarray(1e-10, jnp.float32)
+    cut = min(t_fast, t_slow)
+    short = loop(bucket.args, s0, bucket.scale, tol,
+                 jnp.asarray(cut, jnp.int32), active)
+    full = loop(bucket.args, s0, bucket.scale, tol,
+                jnp.asarray(10_000, jnp.int32), active)
+    lane = 0 if t_fast < t_slow else 1
+    # the early-converged lane froze at `cut`; extra loop bodies ran for
+    # the other lane only
+    assert np.array_equal(np.asarray(short[0][lane]),
+                          np.asarray(full[0][lane]))
+    assert not np.array_equal(np.asarray(short[0][1 - lane]),
+                              np.asarray(full[0][1 - lane]))
+    assert int(full[2][lane]) == min(t_fast, t_slow)
+    assert int(full[2][1 - lane]) == max(t_fast, t_slow)
+
+
+@pytest.mark.parametrize("backend", REGIMES)
+def test_clean_tenant_bitstable_under_neighbour_resolves(platform, backend):
+    """A clean tenant's ψ must be bit-identical across a co-tenant's
+    patch → re-solve cycle (its lane is masked out of the batched loop)."""
+    tenants, _ = platform
+    fleet = _fleet(backend)
+    for i, (g, a) in enumerate(tenants):
+        fleet.admit(f"t{i}", g, a)
+    fleet.solve()
+    frozen = {t: fleet.psi(t).copy() for t in ("t0", "t2")}
+    for round_ in range(2):
+        fleet.patch_activity("t1", np.asarray([5 + round_]),
+                             lam=np.asarray([4.0 + round_]))
+        fleet.solve()
+        for t, before in frozen.items():
+            assert np.array_equal(before, fleet.psi(t))
+    assert fleet.stats("t1")["iterations"] > 0
+
+
+# --------------------------------------------------------------------- #
+# Delta patches + warm starts
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", REGIMES)
+def test_fleet_patch_activity_parity(platform, backend):
+    tenants, _ = platform
+    fleet = _fleet(backend)
+    for i, (g, a) in enumerate(tenants):
+        fleet.admit(f"t{i}", g, a)
+    fleet.solve()
+    cold = fleet.stats("t1")["iterations"]
+    g, act = tenants[1]
+    fleet.patch_activity("t1", np.asarray([7]), lam=np.asarray([6.0]))
+    lam2 = act.lam.copy()
+    lam2[7] = 6.0
+    from repro.core import Activity
+    psi_true, _ = exact_psi(g, Activity(lam2, act.mu))
+    assert np.abs(fleet.psi("t1") - psi_true).max() <= 1e-6
+    assert fleet.stats("t1")["iterations"] < cold    # warm restart
+
+
+@pytest.mark.parametrize("backend", REGIMES)
+def test_fleet_patch_edges_parity(platform, backend):
+    tenants, _ = platform
+    fleet = _fleet(backend)
+    g, act = tenants[0]
+    fleet.admit("t0", g, act)
+    fleet.solve()
+    src = np.asarray([0, 1, 2], np.int32)
+    dst = np.asarray([50, 60, 70], np.int32)
+    fleet.patch_edges("t0", src, dst)
+    g2 = Graph(g.n, np.concatenate([g.src, src]),
+               np.concatenate([g.dst, dst])).dedup()
+    psi_true, _ = exact_psi(g2, act)
+    assert np.abs(fleet.psi("t0") - psi_true).max() <= 1e-6
+    assert fleet.stats("t0")["rebuckets"] == 0
+
+
+@pytest.mark.parametrize("backend", REGIMES)
+def test_warm_start_survives_rebucket(backend):
+    """Edge growth past the bucket's capacity migrates the tenant to the
+    next rung *with* its series vector: the post-migration solve must be a
+    warm handful of iterations, not a cold restart."""
+    g = erdos_renyi(200, 900, seed=5)
+    act = heterogeneous(200, seed=6)
+    policy = BucketPolicy((256,), edge_quantum=1024, edge_growth=2.0)
+    fleet = TenantFleet(backend=backend, tol=1e-8, policy=policy)
+    fleet.admit("a", g, act)
+    fleet.solve()
+    cold = fleet.stats("a")["iterations"]
+    assert fleet.spec_of("a") == BucketSpec(256, 1024)
+    rng = np.random.default_rng(0)
+    have = set(zip(g.src.tolist(), g.dst.tolist()))
+    ns, nd = [], []
+    while len(ns) < 200:                     # push m past e_pad = 1024
+        s_, d_ = (int(x) for x in rng.integers(0, 200, 2))
+        if s_ != d_ and (s_, d_) not in have:
+            have.add((s_, d_))
+            ns.append(s_)
+            nd.append(d_)
+    fleet.patch_edges("a", np.asarray(ns, np.int32), np.asarray(nd, np.int32))
+    st = fleet.stats("a")
+    assert st["rebuckets"] == 1
+    assert st["spec"] == BucketSpec(256, 2048)
+    fleet.solve()
+    g2 = Graph(200, np.concatenate([g.src, ns]),
+               np.concatenate([g.dst, nd])).dedup()
+    psi_true, _ = exact_psi(g2, act)
+    assert np.abs(fleet.psi("a") - psi_true).max() <= 1e-6
+    assert fleet.stats("a")["iterations"] < cold
+
+
+def test_admit_evict_lifecycle(platform):
+    tenants, solo = platform
+    fleet = _fleet("dense")
+    for i, (g, a) in enumerate(tenants):
+        fleet.admit(f"t{i}", g, a)
+    with pytest.raises(ValueError, match="already admitted"):
+        fleet.admit("t0", *tenants[0])
+    fleet.solve()
+    psi_b = fleet.evict("t1")
+    assert psi_b.shape == (tenants[1][0].n,)
+    assert fleet.tenant_ids == ("t0", "t2") and len(fleet) == 2
+    with pytest.raises(KeyError, match="unknown tenant"):
+        fleet.psi("t1")
+    # survivors keep serving, still correct after a restack
+    fleet.patch_activity("t2", np.asarray([3]), mu=np.asarray([0.7]))
+    fleet.solve()
+    assert np.abs(fleet.psi("t0") - solo[0]).max() <= 1e-6
+
+
+def test_admit_dedupes_multi_edges():
+    """Duplicate edges must not split the regimes: the dense {0,1}
+    adjacency and the edge-form segment-sum only agree on simple graphs,
+    so admit() dedupes (matching the paper's model and Graph.dedup)."""
+    g_dup = Graph(16, np.asarray([0, 1, 2, 3, 0, 4]),
+                  np.asarray([1, 2, 3, 4, 1, 4]))   # dup (0,1) + self-loop
+    act = heterogeneous(16, seed=1)
+    psis = {}
+    for backend in REGIMES:
+        fleet = TenantFleet(backend=backend, tol=1e-10,
+                            policy=BucketPolicy((256,), edge_quantum=1024))
+        fleet.admit("a", g_dup, act)
+        psis[backend] = fleet.psi("a")
+    psi_true, _ = exact_psi(g_dup.dedup(), act)
+    for backend, psi in psis.items():
+        assert np.abs(psi - psi_true).max() <= 1e-6, backend
+
+
+def test_admit_with_warm_s0(platform):
+    tenants, _ = platform
+    g, act = tenants[0]
+    res = make_engine("reference", graph=g, activity=act).run(tol=1e-8)
+    fleet = _fleet("reference")
+    fleet.admit("warm", g, act, s0=np.asarray(res.s))
+    fleet.admit("cold", g, act)
+    fleet.solve()
+    assert fleet.stats("warm")["iterations"] < fleet.stats("cold")["iterations"]
+
+
+def test_pallas_block_growth_escalation_preserves_lanes():
+    """Edge growth that outgrows the bucket's pallas block capacity (but
+    not its edge capacity) forces a full restack; clean co-tenants must
+    come back bit-identical and the grown tenant warm + correct."""
+    g_a = erdos_renyi(200, 2000, seed=8)
+    g_b = erdos_renyi(220, 2000, seed=9)
+    act_a, act_b = heterogeneous(200, seed=10), heterogeneous(220, seed=11)
+    policy = BucketPolicy((256,), edge_quantum=8192)
+    fleet = TenantFleet(backend="pallas", tol=1e-8, policy=policy,
+                        tile=256, e1=8, e2=128)
+    fleet.admit("a", g_a, act_a)
+    fleet.admit("b", g_b, act_b)
+    fleet.solve()
+    cold = fleet.stats("a")["iterations"]
+    psi_b = fleet.psi("b").copy()
+    bucket = fleet._buckets[fleet.spec_of("a")]
+    nb_before = bucket.nb
+    # > nb*eblk − m new edges into the single output tile → block overflow
+    rng = np.random.default_rng(1)
+    have = set(zip(g_a.src.tolist(), g_a.dst.tolist()))
+    ns, nd = [], []
+    while len(ns) < nb_before * 1024 - g_a.m + 64:
+        s_, d_ = (int(x) for x in rng.integers(0, 200, 2))
+        if s_ != d_ and (s_, d_) not in have:
+            have.add((s_, d_))
+            ns.append(s_)
+            nd.append(d_)
+    fleet.patch_edges("a", np.asarray(ns, np.int32), np.asarray(nd, np.int32))
+    assert fleet.stats("a")["rebuckets"] == 0      # same bucket, more blocks
+    fleet.solve()
+    assert bucket.nb > nb_before
+    g2 = Graph(200, np.concatenate([g_a.src, ns]),
+               np.concatenate([g_a.dst, nd])).dedup()
+    psi_true, _ = exact_psi(g2, act_a)
+    assert np.abs(fleet.psi("a") - psi_true).max() <= 1e-6
+    assert fleet.stats("a")["iterations"] < cold   # warm state survived
+    assert np.array_equal(psi_b, fleet.psi("b"))   # clean lane untouched
+
+
+@pytest.mark.parametrize("backend", REGIMES)
+def test_invalidate_does_not_drop_pending_patches(platform, backend):
+    """A patch made before invalidate() must still reach the device
+    operators: the post-invalidate solve has to converge on the *patched*
+    platform, not the stale stack."""
+    tenants, _ = platform
+    g, act = tenants[0]
+    fleet = _fleet(backend)
+    fleet.admit("a", g, act)
+    fleet.solve()
+    fleet.patch_activity("a", np.asarray([7]), lam=np.asarray([6.0]))
+    fleet.invalidate()
+    fleet.solve()
+    from repro.core import Activity
+    lam2 = act.lam.copy()
+    lam2[7] = 6.0
+    psi_true, _ = exact_psi(g, Activity(lam2, act.mu))
+    assert np.abs(fleet.psi("a") - psi_true).max() <= 1e-6
+
+
+# --------------------------------------------------------------------- #
+# Frontier: cross-tenant queries, staleness, the PsiService view
+# --------------------------------------------------------------------- #
+def test_frontier_scores_batch_and_global_top_k(platform):
+    tenants, _ = platform
+    fleet = _fleet("dense")
+    for i, (g, a) in enumerate(tenants):
+        fleet.admit(f"t{i}", g, a)
+    fr = fleet.frontier
+    ids = ["t0", "t1", "t0", "t2"]
+    users = np.asarray([3, 4, 5, 6])
+    got = fr.scores_batch(ids, users)
+    want = [fleet.psi(t)[u] for t, u in zip(ids, users)]
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+    with pytest.raises(ValueError, match="align"):
+        fr.scores_batch(["t0"], np.asarray([1, 2]))
+    top = fr.global_top_k(5)
+    assert len(top) == 5
+    scores = [s for _, _, s in top]
+    assert scores == sorted(scores, reverse=True)
+    best = max((float(fleet.psi(t).max()), t) for t in fleet.tenant_ids)
+    assert top[0][0] == best[1] and top[0][2] == pytest.approx(best[0])
+
+
+def test_frontier_staleness_epoch_tracking(platform):
+    tenants, _ = platform
+    fleet = _fleet("dense")
+    g, a = tenants[0]
+    fleet.admit("a", g, a)
+    fr = fleet.frontier
+    assert fr.staleness("a") == 1 and fr.epoch("a") == 0   # never solved
+    fleet.solve()
+    assert fr.staleness("a") == 0
+    fleet.patch_activity("a", np.asarray([1]), lam=np.asarray([2.0]))
+    fleet.patch_activity("a", np.asarray([2]), lam=np.asarray([3.0]))
+    assert fr.staleness("a") == 2 and fr.epoch("a") == 2
+    fr.top_k("a", 3)                          # query forces freshness
+    assert fr.staleness("a") == 0
+
+
+def test_frontier_ranking_memoized_per_epoch(platform, monkeypatch):
+    tenants, _ = platform
+    fleet = _fleet("dense")
+    fleet.admit("a", *tenants[0])
+    fr = fleet.frontier
+    fr.rank_of("a", np.asarray([1, 2]))
+    calls = {"n": 0}
+    orig = np.argsort
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(np, "argsort", counting)
+    fr.rank_of("a", np.asarray([3]))          # memoized: no new sort
+    fr.top_k("a", 4)
+    assert calls["n"] == 0
+    fleet.patch_activity("a", np.asarray([1]), mu=np.asarray([0.9]))
+    fr.rank_of("a", np.asarray([3]))          # epoch moved: one new sort
+    assert calls["n"] >= 1
+
+
+def test_psi_service_from_fleet_view(platform):
+    tenants, solo = platform
+    fleet = _fleet("dense")
+    for i, (g, a) in enumerate(tenants):
+        fleet.admit(f"t{i}", g, a)
+    view = PsiService.from_fleet(fleet, "t2")
+    assert view.backend == "fleet[dense]"
+    assert np.abs(view.scores() - solo[2]).max() <= 1e-6
+    idx, vals = view.top_k(3)
+    assert np.all(np.diff(vals) <= 0)
+    assert view.rank_of(np.asarray([int(idx[0])]))[0] == 0
+    g, act = tenants[2]
+    view.update_activity(np.asarray([4]), lam=np.asarray([5.0]))
+    from repro.core import Activity
+    lam2 = act.lam.copy()
+    lam2[4] = 5.0
+    psi_true, _ = exact_psi(g, Activity(lam2, act.mu))
+    assert np.abs(view.scores() - psi_true).max() <= 1e-6
+    assert view.last_iterations() > 0
+    assert view.graph.n == g.n
+
+
+# --------------------------------------------------------------------- #
+# Bucket policy + construction validation
+# --------------------------------------------------------------------- #
+def test_bucket_policy_ladder():
+    p = BucketPolicy((256, 1024), edge_quantum=1024, edge_growth=2.0)
+    assert p.bucket_for(100, 500) == BucketSpec(256, 1024)
+    assert p.bucket_for(257, 1025) == BucketSpec(1024, 2048)
+    assert p.bucket_for(5000, 3000) == BucketSpec(8192, 4096)  # doubled tail
+    assert p.needs_rebucket(BucketSpec(256, 1024), 200, 1025)
+    assert not p.needs_rebucket(BucketSpec(256, 1024), 256, 1024)
+    with pytest.raises(ValueError, match="ascending"):
+        BucketPolicy((512, 256))
+    with pytest.raises(ValueError, match="exceed"):
+        BucketPolicy((256,), edge_growth=1.0)
+    assert BucketPolicy.from_spec("512, 2048").node_sizes == (512, 2048)
+
+
+def test_bucket_policy_lane_quantum():
+    p = BucketPolicy((256,), lane_quantum=4)
+    assert p.lanes_padded(1) == 4 and p.lanes_padded(5) == 8
+    acct = p.occupancy(BucketSpec(256, 1024), [(200, 900)])
+    assert acct["lanes"] == 4 and acct["lane_occupancy"] == 0.25
+
+
+def test_lane_quantum_pad_lanes_are_inert(platform):
+    tenants, solo = platform
+    policy = BucketPolicy((512,), edge_quantum=4096, lane_quantum=4)
+    fleet = TenantFleet(backend="dense", tol=1e-8, policy=policy)
+    fleet.admit("a", *tenants[0])
+    fleet.solve()
+    assert np.abs(fleet.psi("a") - solo[0]).max() <= 1e-6
+
+
+def test_fleet_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="unknown fleet backend"):
+        TenantFleet(backend="bsr")
+    with pytest.raises(ValueError, match="l1"):
+        TenantFleet(backend="pallas", norm="l2")
+
+
+def test_shared_bucket_plan_across_tenants(platform):
+    """Same-bucket tenants must reuse one autotune plan (bucket-shape key),
+    however many are admitted."""
+    from repro.kernels.autotune import PlanCache
+    tenants, _ = platform
+    cache = PlanCache()
+    fleet = TenantFleet(backend="pallas", tol=1e-8, plan_cache=cache,
+                        policy=BucketPolicy((512,), edge_quantum=4096))
+    for i, (g, a) in enumerate(tenants):
+        fleet.admit(f"t{i}", g, a)
+    fleet.solve()
+    assert cache.misses == 1                 # one plan for the one bucket
+    fleet.patch_activity("t0", np.asarray([1]), lam=np.asarray([2.0]))
+    fleet.solve()
+    assert cache.misses == 1                 # patches never re-plan
+
+
+# --------------------------------------------------------------------- #
+# Satellite: make_engine rejects unknown backend kwargs
+# --------------------------------------------------------------------- #
+def test_make_engine_rejects_unknown_kwargs():
+    from repro.core import available_backends
+    with pytest.raises(ValueError, match="unknown engine option"):
+        make_engine("reference", tile=128)
+    with pytest.raises(ValueError) as exc:
+        make_engine("reference", chunk_itres=4)     # typo'd distributed opt
+    msg = str(exc.value)
+    assert "chunk_itres" in msg
+    for name in available_backends():
+        assert name in msg                   # the full registry is listed
+    # known options still construct fine
+    make_engine("pallas", regime="bsr")
+    make_engine("reference", check_every=2)
