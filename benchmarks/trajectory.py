@@ -17,6 +17,11 @@ replaces it), so speedups and regressions are measured, not asserted:
   docs/SERVING.md) vs the same tenants solved sequentially by solo
   ``reference`` engines at the same tolerance (acceptance: ≥ 2×
   tenants-per-second, every fleet ψ within tol of its solo solve).
+* ``async_straggler`` — the bounded-staleness executor benchmark
+  (docs/ASYNC.md): the same chunk pipeline barriered (``tau=0``) vs
+  overlapped (``tau=2``) under a rotating simulated straggler, at matched
+  tolerance (acceptance: ≥ 1.3× wall-clock for the overlapped pipeline,
+  psi_err vs the synchronous reference recorded and ≤ 1e-8).
 
 Run via ``python -m benchmarks.run --only trajectory`` (add ``--quick`` for
 the CI smoke sizes).
@@ -143,6 +148,55 @@ def run(quick: bool = False, json_path: str = JSON_PATH) -> list[dict]:
         emit(f"trajectory/{graph_name}/auto_vs_best",
              walls["auto"] / best * 100.0,
              "auto wall as % of best hand-picked regime")
+
+    # ---- async trajectory: bounded-staleness chunks vs the barrier ----- #
+    # One chunk per epoch sleeps `delay` (rotating straggler). The tau=0
+    # pipeline is the *same code path* forced bulk-synchronous — every
+    # epoch pays the straggler; tau=2 lets the delayed chunk fall behind
+    # and amortizes the delay across the pipeline (docs/ASYNC.md).
+    C = 4
+    n_a, m_a = (1_200, 8_000) if quick else (3_000, 20_000)
+    delay = 0.015 if quick else 0.02
+    tol_a = 1e-9
+    g_a = powerlaw_configuration(n_a, m_a, seed=21)
+    act_a = heterogeneous(n_a, seed=22)
+    psi_sync = np.asarray(make_engine(
+        "reference", graph=g_a, activity=act_a,
+        dtype=jnp.float64).run(tol=tol_a).psi)
+
+    def rotating_straggler(chunk, epoch):
+        return delay if epoch % C == chunk else 0.0
+
+    async_walls = {}
+    reps_a = 2 if quick else 3
+    for label, tau in (("async[tau=0]", 0), ("async[tau=2]", 2)):
+        eng = make_engine("async", graph=g_a, activity=act_a,
+                          dtype=jnp.float64, num_chunks=C, tau=tau,
+                          delay_hook=rotating_straggler)
+        res = eng.run(tol=tol_a)              # compile + converge once
+        times = []
+        for _ in range(reps_a):
+            t0 = time.perf_counter()
+            res = eng.run(tol=tol_a)          # cold s₀ = c each rep
+            times.append(time.perf_counter() - t0)
+        wall = float(np.median(times))
+        async_walls[label] = wall
+        psi_err = float(np.abs(np.asarray(res.psi) - psi_sync).max())
+        entries.append(dict(
+            graph="async_straggler", backend=label, regime=f"tau={tau}",
+            n=n_a, m=m_a, dtype="float64", tol=tol_a, wall_s=wall,
+            iterations=int(res.iterations), matvecs=int(res.matvecs),
+            converged=bool(res.converged), gap=float(res.gap),
+            psi_err=psi_err, chunks=C, straggler_delay_s=delay,
+            max_staleness=int(eng.last_run.max_staleness),
+            overlap_efficiency=float(eng.last_run.overlap_efficiency)))
+        emit(f"trajectory/async_straggler/{label}", wall * 1e6,
+             f"epochs={int(res.iterations)};psi_err={psi_err:.1e}"
+             f";max_staleness={int(eng.last_run.max_staleness)}")
+    speedup = async_walls["async[tau=0]"] / async_walls["async[tau=2]"]
+    entries[-1]["speedup_vs_sync"] = speedup
+    emit("trajectory/async_straggler/speedup", speedup * 100.0,
+         "overlapped tau=2 wall vs barriered tau=0, % (>130 = acceptance)")
 
     # ---- fleet trajectory: tenants-per-device batched serving ---------- #
     from repro.serving import TenantFleet

@@ -1,0 +1,188 @@
+"""`AsyncPsiDriver` — the fault-tolerant front end of the bounded-staleness
+scheduler, with the same checkpoint/restart + elastic contract as the
+synchronous :class:`~repro.runtime.psi_driver.PsiDriver`.
+
+The one structural difference from the sync driver: async state is not just
+the board — it is the board *plus the per-chunk epoch vector*. Checkpoints
+carry both, so a restart resumes the skewed pipeline exactly where it was
+(straggler lag and all) instead of collapsing it to a synchronous snapshot;
+the only lost work is whatever was in flight when the failure hit.
+
+The elastic analogue of ``PsiDriver.remesh`` is :meth:`AsyncPsiDriver.rechunk`:
+the board converts through node order into a new chunk decomposition and the
+new pipeline warm-starts from it (epochs restart at a uniform zero — an
+epoch vector is meaningless across a chunk-count change, the contraction
+progress lives entirely in the board).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.operators import HostOperators
+from ..graphs.structure import Graph
+from ..runtime.psi_driver import DriverReport, PsiDriverBase
+from .scheduler import AsyncChunkScheduler, ChunkedOperators
+from .staleness import StalenessBound
+
+__all__ = ["AsyncPsiDriver", "AsyncDriverReport"]
+
+
+@dataclasses.dataclass
+class AsyncDriverReport(DriverReport):
+    """`DriverReport` plus the async-only observability fields."""
+
+    max_staleness: int = 0            # max observed epoch spread
+    overlap_efficiency: float = 0.0   # Σ worker busy time / wall (>1 ⇒ overlap)
+    sync_sweeps: int = 0              # synchronous verification sweeps run
+    rejected_certificates: int = 0    # under-tol gaps refused for τ-violation
+    epochs: np.ndarray | None = None  # final per-chunk epoch vector
+    tau: int = 0
+
+
+class AsyncPsiDriver(PsiDriverBase):
+    """Overlapped Power-ψ execution with bounded-staleness certificates.
+
+    Same call surface as :class:`~repro.runtime.psi_driver.PsiDriver`:
+    ``run(tol=..., max_iter=..., fail_hook=...)`` → a report, plus the
+    elastic :meth:`rechunk`. ``fail_hook(tick)`` receives a monotonically
+    increasing tick (one per epoch-floor advance — the async analogue of
+    the sync driver's chunk index) and returning True drops the in-memory
+    state and restores board + epoch vector from the last checkpoint.
+
+    ``delay_hook(chunk, epoch) -> seconds`` injects simulated stragglers
+    (see :class:`~repro.asyncexec.scheduler.AsyncChunkScheduler`).
+    """
+
+    def __init__(self, graph: Graph, activity, *, num_chunks: int = 4,
+                 tau: int = 2, ckpt_dir: str | None = None,
+                 ckpt_every: int = 8, deadline_factor: float = 3.0,
+                 dtype=jnp.float32, max_workers: int | None = None,
+                 delay_hook: Callable[[int, int], float] | None = None,
+                 read_hook=None):
+        super().__init__(ckpt_dir=ckpt_dir, deadline_factor=deadline_factor)
+        self.num_chunks = int(num_chunks)
+        self.tau = int(tau)
+        self.ckpt_every = int(ckpt_every)
+        self.dtype = dtype
+        self.max_workers = max_workers
+        self.delay_hook = delay_hook
+        self.read_hook = read_hook
+        self.host = HostOperators.from_graph(graph, activity)
+        self.ops = self.host.to_device(dtype)
+        self.chunked = ChunkedOperators(self.host, num_chunks, dtype=dtype)
+        self.sched = AsyncChunkScheduler(
+            self.chunked, bound=StalenessBound(tau), max_workers=max_workers,
+            delay_hook=delay_hook, read_hook=read_hook)
+        self._warm_s: np.ndarray | None = None   # node order, set by rechunk
+
+    @classmethod
+    def from_engine(cls, engine, **kw) -> "AsyncPsiDriver":
+        """Build a driver from a prepared ``async`` PsiEngine (inherits its
+        chunk count and staleness bound)."""
+        if getattr(engine, "sched", None) is None:
+            raise ValueError("engine has no async scheduler state; "
+                             "use make_engine('async', graph=..., ...)")
+        kw.setdefault("num_chunks", engine.num_chunks)
+        kw.setdefault("tau", engine.tau)
+        kw.setdefault("dtype", engine.dtype)
+        kw.setdefault("max_workers", engine.max_workers)
+        kw.setdefault("delay_hook", engine.delay_hook)
+        kw.setdefault("read_hook", engine.read_hook)
+        return cls(engine.graph, engine.activity, **kw)
+
+    # -- mutations between runs (O(Δ), reuse the scheduler's hooks) ------ #
+    def patch_activity(self, users, lam=None, mu=None) -> None:
+        self.host.patch_activity(users, lam=lam, mu=mu)
+        self.ops = self.host.refresh_node_arrays(self.ops, self.dtype)
+        self.sched.patch_node_arrays()
+
+    def patch_edges(self, src, dst) -> None:
+        src, dst = self.host.patch_edges(src, dst)
+        self.ops = self.host.to_device(self.dtype)
+        if src.size:
+            self.sched.patch_edges(src, dst)
+
+    # -- execution ------------------------------------------------------- #
+    def run(self, *, tol: float = 1e-8, max_iter: int = 2000,
+            fail_hook: Callable[[int], bool] | None = None
+            ) -> AsyncDriverReport:
+        """Drive the pipeline to a certified + sync-verified ``tol``.
+
+        The gap convention matches ``PsiDriver.run``: raw l1 (no ‖B‖
+        scaling). ``max_iter`` bounds per-chunk epochs — comparable to the
+        sync driver's iteration budget since one epoch of every chunk is
+        one global iteration's worth of work.
+        """
+        sched = self.sched
+        self._reset_tracking()
+        if self._warm_s is not None:
+            sched.reset(s0=self._warm_s)     # one-shot, like PsiDriver
+            self._warm_s = None
+        else:
+            sched.reset()
+        restarts = 0
+        tick = 0
+        last_ckpt = 0
+        np_dtype = np.dtype(jnp.dtype(self.dtype).name)
+        self._ckpt_save(0, dict(**sched.export_state(), it=np.int64(0)))
+
+        def on_epoch(s: AsyncChunkScheduler, min_epoch: int) -> None:
+            nonlocal restarts, tick, last_ckpt
+            tick += 1
+            if self.ckpt_dir and min_epoch >= last_ckpt + self.ckpt_every:
+                self._ckpt_save(min_epoch, dict(**s.export_state(),
+                                                it=np.int64(min_epoch)))
+                last_ckpt = min_epoch
+            if fail_hook is not None and fail_hook(tick):
+                restarts += 1
+                data = self._ckpt_restore_latest(dict(
+                    s=np.zeros(self.chunked.n_pad, np_dtype),
+                    epochs=np.zeros(self.num_chunks, np.int64),
+                    it=np.int64(0)))
+                if data is not None:
+                    # the epoch vector rides in the checkpoint: the restart
+                    # resumes the *skewed* pipeline, not a sync collapse
+                    s.request_restore(data["s"], data["epochs"])
+                    last_ckpt = int(data["it"])
+
+        out = sched.run(tol=tol, max_epochs=max_iter, scale=1.0,
+                        epoch_callback=on_epoch)
+        # step_log is per-run (cleared at run entry) and includes drained
+        # steps; sync verification sweeps run on the main thread and are
+        # reported via sync_sweeps, not per-step durations
+        for chunk, _epoch, dur in sched.step_log:
+            self._note_duration(chunk, dur)
+        s_node = jnp.asarray(self.chunked.node_order(out.s), self.dtype)
+        psi = np.asarray(self.ops.psi_epilogue(s_node))
+        return AsyncDriverReport(
+            iterations=int(out.epochs.max()), gap=out.gap,
+            chunks=out.total_steps, restarts=restarts,
+            slow_chunks=self._slow, psi=psi,
+            chunk_durations=self._durations,
+            slow_chunk_events=self._slow_events,
+            max_staleness=out.max_staleness,
+            overlap_efficiency=out.overlap_efficiency,
+            sync_sweeps=out.sync_sweeps,
+            rejected_certificates=out.rejected_certificates,
+            epochs=out.epochs, tau=self.tau)
+
+    # ------------------------------------------------------------------ #
+    def rechunk(self, num_chunks: int, *, tau: int | None = None
+                ) -> "AsyncPsiDriver":
+        """Elastic re-chunk: carry the board across a chunk-count change
+        (the async analogue of ``PsiDriver.remesh``). The next ``run``
+        warm-starts the new pipeline from the converted board."""
+        s_node = self.chunked.node_order(self.sched.board)
+        driver = AsyncPsiDriver(
+            self.host.graph(), self.host.activity(),
+            num_chunks=num_chunks, tau=self.tau if tau is None else tau,
+            ckpt_dir=self.ckpt_dir, ckpt_every=self.ckpt_every,
+            deadline_factor=self.deadline_factor, dtype=self.dtype,
+            max_workers=self.max_workers, delay_hook=self.delay_hook,
+            read_hook=self.read_hook)
+        driver._warm_s = np.asarray(s_node)
+        return driver

@@ -37,7 +37,49 @@ from ..graphs.partition import Partition2D, partition_2d
 from ..graphs.structure import Graph
 from .activity import Activity
 
-__all__ = ["DistributedPsi", "DistPsiArrays"]
+__all__ = ["DistributedPsi", "DistPsiArrays", "PartialReduction",
+           "BlockOverflowError"]
+
+
+class BlockOverflowError(RuntimeError):
+    """An edge insert does not fit a partition block's ``e_max`` capacity.
+
+    Carries which (row, col) block overflowed and the capacity the insert
+    would need, so callers can regrow the partition deliberately instead of
+    guessing from a silent failure.
+    """
+
+    def __init__(self, block: tuple[int, int], e_max: int, required: int):
+        self.block = block
+        self.e_max = e_max
+        self.required = required
+        super().__init__(
+            f"distributed edge block (row={block[0]}, col={block[1]}) "
+            f"overflows e_max={e_max}: the insert requires capacity "
+            f">= {required}; regrow the partition (re-prepare) or construct "
+            f"the engine with on_overflow='regrow'")
+
+
+@dataclasses.dataclass(frozen=True)
+class PartialReduction:
+    """Explicit handle between the dispatch and finalize halves of one
+    sharded iteration: the un-psummed per-device dst partials plus the
+    iterate they were pushed from (the finalize half needs it for the gap).
+
+    Produced by :meth:`DistributedPsi.make_dispatch`, consumed by
+    :meth:`DistributedPsi.make_finalize`; composing the two is bit-identical
+    to the fused :meth:`DistributedPsi.make_step` program. The split exists
+    so an overlapped executor can issue the next dispatch (pure local
+    compute) while a previous finalize (the collective half) is still in
+    flight.
+    """
+
+    partial_t: jax.Array   # f[d, mo, nc] — pre-reduction dst partials
+    s_in: jax.Array        # f[d, local]  — src-layout iterate the push read
+
+
+jax.tree_util.register_dataclass(
+    PartialReduction, data_fields=["partial_t", "s_in"], meta_fields=[])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,79 +189,116 @@ class DistributedPsi:
                     lam_piece=grid, d_piece=grid)
 
     # ------------------------------------------------------------------ #
-    def make_step(self):
-        """shard_map'd single iteration: (s_src, arrays) → (s'_src, gap)."""
-        p = self.part
+    def _arr_specs(self) -> DistPsiArrays:
+        """Partition specs of the array pytree inside every shard_map."""
         src_axes = self.src_axes
-        nc = p.nc
+        grid = P(src_axes, "model", None)
+        row = P(src_axes, None)
+        return DistPsiArrays(
+            src_local=grid, dst_local=grid, inv_w_src=row, mu_piece=grid,
+            c_piece=grid, c_src=row, lam_piece=grid, d_piece=grid)
+
+    @staticmethod
+    def _local_push(s, a: DistPsiArrays, nc: int) -> jax.Array:
+        """Dispatch half's local math (inside shard_map, shapes [1, ...]):
+        gather s·(1/w) by local src ids, sorted segment-sum onto the local
+        dst block. Pure compute — no collectives."""
+        s_loc = s[0]
+        src_ids = a.src_local[0, 0]
+        dst_ids = a.dst_local[0, 0]
+        s_pre = jnp.concatenate(
+            [s_loc * a.inv_w_src[0], jnp.zeros((1,), s.dtype)])
+        return jax.ops.segment_sum(
+            s_pre[src_ids], dst_ids, nc + 1, indices_are_sorted=True)[:nc]
+
+    @staticmethod
+    def _local_finish(partial_t, s, a: DistPsiArrays, src_axes):
+        """Finalize half's local math: psum_scatter the partials (the
+        scattered slice IS piece (r, c)), μ/c epilogue, all_gather over the
+        model axis, psummed l1 gap against the input iterate."""
+        t_piece = jax.lax.psum_scatter(
+            partial_t, src_axes, scatter_dimension=0, tiled=True)
+        s_new_piece = a.mu_piece[0, 0] * t_piece + a.c_piece[0, 0]
+        s_new = jax.lax.all_gather(
+            s_new_piece, "model", axis=0, tiled=True)[None]
+        gap_local = jnp.sum(jnp.abs(s_new - s))
+        gap = jax.lax.psum(gap_local, src_axes)
+        return s_new, gap
+
+    def make_step(self):
+        """shard_map'd single iteration: (s_src, arrays) → (s'_src, gap).
+
+        The fused composition of :meth:`make_dispatch` and
+        :meth:`make_finalize` in one program (XLA overlaps the next tile's
+        gather with the previous collective where it can); the split halves
+        below expose the same math with an explicit
+        :class:`PartialReduction` boundary for overlapped executors.
+        """
+        src_axes = self.src_axes
+        nc = self.part.nc
 
         def local_step(s, a: DistPsiArrays):
-            # shapes inside shard_map: s [1, local_src_n]; edges [1,1,e_max]
-            s_loc = s[0]
-            src_ids = a.src_local[0, 0]
-            dst_ids = a.dst_local[0, 0]
-            s_pre = jnp.concatenate(
-                [s_loc * a.inv_w_src[0], jnp.zeros((1,), s.dtype)])
-            contrib = s_pre[src_ids]
-            partial_t = jax.ops.segment_sum(
-                contrib, dst_ids, nc + 1, indices_are_sorted=True)[:nc]
-            # reduce over src rows; scattered slice == piece (r, c)
-            t_piece = jax.lax.psum_scatter(
-                partial_t, src_axes, scatter_dimension=0, tiled=True)
-            s_new_piece = a.mu_piece[0, 0] * t_piece + a.c_piece[0, 0]
-            # row r reassembles its block-cyclic shard
-            s_new = jax.lax.all_gather(
-                s_new_piece, "model", axis=0, tiled=True)[None]
-            gap_local = jnp.sum(jnp.abs(s_new - s))
-            gap = jax.lax.psum(gap_local, src_axes)
-            return s_new, gap
+            partial_t = self._local_push(s, a, nc)
+            return self._local_finish(partial_t, s, a, src_axes)
 
-        a_specs = DistPsiArrays(
-            src_local=P(src_axes, "model", None),
-            dst_local=P(src_axes, "model", None),
-            inv_w_src=P(src_axes, None),
-            mu_piece=P(src_axes, "model", None),
-            c_piece=P(src_axes, "model", None),
-            c_src=P(src_axes, None),
-            lam_piece=P(src_axes, "model", None),
-            d_piece=P(src_axes, "model", None))
         return shard_map(
             local_step, mesh=self.mesh,
-            in_specs=(P(src_axes, None), a_specs),
+            in_specs=(P(src_axes, None), self._arr_specs()),
+            out_specs=(P(src_axes, None), P()))
+
+    def make_dispatch(self):
+        """Compute-only half: (s_src, arrays) → :class:`PartialReduction`.
+
+        No collectives are issued — the returned handle carries the
+        un-psummed per-device dst partials (and the iterate, for the
+        finalize gap), so a scheduler can dispatch the *next* chunk's local
+        push before this handle's reduction has drained.
+        """
+        src_axes = self.src_axes
+        nc = self.part.nc
+
+        def local_dispatch(s, a: DistPsiArrays):
+            partial_t = self._local_push(s, a, nc)
+            return PartialReduction(partial_t=partial_t[None, None], s_in=s)
+
+        return shard_map(
+            local_dispatch, mesh=self.mesh,
+            in_specs=(P(src_axes, None), self._arr_specs()),
+            out_specs=PartialReduction(
+                partial_t=P(src_axes, "model", None),
+                s_in=P(src_axes, None)))
+
+    def make_finalize(self):
+        """Collective half: (:class:`PartialReduction`, arrays) →
+        (s'_src, gap). psum_scatter + epilogue + all_gather + gap psum —
+        exactly the tail of :meth:`make_step`."""
+        src_axes = self.src_axes
+
+        def local_finalize(h: PartialReduction, a: DistPsiArrays):
+            return self._local_finish(h.partial_t[0, 0], h.s_in, a, src_axes)
+
+        return shard_map(
+            local_finalize, mesh=self.mesh,
+            in_specs=(PartialReduction(
+                partial_t=P(src_axes, "model", None),
+                s_in=P(src_axes, None)), self._arr_specs()),
             out_specs=(P(src_axes, None), P()))
 
     def make_epilogue(self):
         """ψ from converged s: one more push, then (λ⊙t + d)/N, dst layout."""
-        p = self.part
         src_axes = self.src_axes
-        nc, n = p.nc, p.n
+        nc, n = self.part.nc, self.part.n
 
         def local_epilogue(s, a: DistPsiArrays):
-            s_loc = s[0]
-            src_ids = a.src_local[0, 0]
-            dst_ids = a.dst_local[0, 0]
-            s_pre = jnp.concatenate(
-                [s_loc * a.inv_w_src[0], jnp.zeros((1,), s.dtype)])
-            partial_t = jax.ops.segment_sum(
-                s_pre[src_ids], dst_ids, nc + 1, indices_are_sorted=True)[:nc]
+            partial_t = self._local_push(s, a, nc)
             t_piece = jax.lax.psum_scatter(
                 partial_t, src_axes, scatter_dimension=0, tiled=True)
             psi_piece = (a.lam_piece[0, 0] * t_piece + a.d_piece[0, 0]) / n
             return psi_piece[None, None]
 
-        src_spec = P(src_axes, None)
-        arr_specs = DistPsiArrays(
-            src_local=P(src_axes, "model", None),
-            dst_local=P(src_axes, "model", None),
-            inv_w_src=src_spec,
-            mu_piece=P(src_axes, "model", None),
-            c_piece=P(src_axes, "model", None),
-            c_src=src_spec,
-            lam_piece=P(src_axes, "model", None),
-            d_piece=P(src_axes, "model", None))
         return shard_map(
             local_epilogue, mesh=self.mesh,
-            in_specs=(src_spec, arr_specs),
+            in_specs=(P(src_axes, None), self._arr_specs()),
             out_specs=P(src_axes, "model", None))
 
     # ------------------------------------------------------------------ #

@@ -32,6 +32,11 @@ Backends are registered by name and constructed through
     chunks exactly like ``runtime/psi_driver.py``; ``accelerate=True``
     applies the Aitken jump at chunk granularity
     (:class:`ChunkExtrapolator`).
+  * ``async``       — the bounded-staleness overlapped chunk scheduler of
+    :mod:`repro.asyncexec`: per-chunk epoch tags, straggler absorption up
+    to ``tau`` epochs, termination gated by the stale-corrected Eq. 19
+    certificate and sealed by a synchronous verification sweep
+    (docs/ASYNC.md).
 
 All backends share one :class:`ConvergenceCriterion` — ε on ‖B‖·‖Δs‖ per
 Eq. 19 — and report interchangeable :class:`~repro.core.power_psi.PsiResult`
@@ -65,7 +70,8 @@ from .power_psi import _NORMS, PsiResult
 
 __all__ = ["ConvergenceCriterion", "EngineState", "PsiEngine",
            "ReferenceEngine", "PallasEngine", "AutoEngine",
-           "AcceleratedEngine", "DistributedEngine", "ChunkExtrapolator",
+           "AcceleratedEngine", "DistributedEngine", "AsyncEngine",
+           "ChunkExtrapolator",
            "make_engine", "register_backend", "available_backends",
            "make_reference_step", "make_dense_step", "make_edge_tile_step",
            "make_batched_loop"]
@@ -528,6 +534,15 @@ class ChunkExtrapolator:
     plain steps (≥ 1 plain iteration after any jump). A chunk whose gap
     fails to shrink disables all future jumps — no revert is needed since
     the chunk's plain steps already re-contracted the iterate.
+
+    **Epoch-consistency guard** (async executors): the geometric-tail
+    formula assumes Δ = s_out − s_in spans a *uniform* number of
+    contraction applications on every coordinate. Under bounded-staleness
+    execution a chunk endpoint can mix per-chunk epochs; callers pass the
+    endpoint pair's ``epoch_spread`` (max − min contributing chunk epoch)
+    and the extrapolator only jumps on same-epoch pairs (``spread == 0``),
+    dropping its ratio history otherwise — a mixed-epoch Δ is not one
+    contraction sample and must not seed r.
     """
 
     def __init__(self, tol: float, *, guard: float = 100.0):
@@ -542,10 +557,18 @@ class ChunkExtrapolator:
         self.enabled = True
         self.jumps = 0
 
-    def advance(self, s_in, s_out, gap: float):
+    def advance(self, s_in, s_out, gap: float, *, epoch_spread: int = 0):
         """Map a finished chunk (input → output, scaled gap) to the next
-        chunk's start vector, possibly extrapolated."""
+        chunk's start vector, possibly extrapolated. ``epoch_spread != 0``
+        marks the endpoints as epoch-inconsistent: no jump fires and the
+        Δ-ratio history resets (synchronous callers pass the default 0)."""
         if not self.enabled:
+            return s_out
+        if epoch_spread != 0:
+            # mixed-epoch Δ poisons both the ratio history and the
+            # gap-progress baseline — drop them, keep only `enabled`
+            self._prev_dn = None
+            self._gap_prev = float("inf")
             return s_out
         if gap >= self._gap_prev:             # jump/stall did not help
             self.enabled = False
@@ -899,19 +922,37 @@ class DistributedEngine(PsiEngine):
     ``accelerate=True`` applies the Aitken jump at *chunk* granularity via
     :class:`ChunkExtrapolator` (the on-device per-iteration loop would break
     the fixed-shape scan contract). ``patch_edges`` is a block-local O(Δ)
-    insert into the node-stable 2-D partition; it returns ``False`` only on
-    genuine block overflow (``e_max`` exceeded), in which case the caller's
-    full re-``prepare`` re-partitions.
+    insert into the node-stable 2-D partition; a genuine block overflow
+    (``e_max`` exceeded) is handled per ``on_overflow``:
+
+    * ``"regrow"`` (default) — warn naming the overflowing block and the
+      required capacity, rebuild the partitioned device arrays from the
+      already-patched host graph at the grown ``e_max``, and return True
+      (the patch *succeeded*; callers never see a silent no-op).
+    * ``"raise"`` — raise :class:`~repro.core.distributed.BlockOverflowError`
+      (block, ``e_max``, required capacity) for callers that budget
+      capacity themselves.
     """
 
-    def __init__(self, *, mesh=None, chunk_iters: int = 16, **kw):
+    def __init__(self, *, mesh=None, chunk_iters: int = 16,
+                 on_overflow: str = "regrow", **kw):
         super().__init__(**kw)
         if self.criterion.norm != "l1":
             raise ValueError("distributed backend psums an l1 gap; "
                              f"got norm={self.criterion.norm!r}")
+        if on_overflow not in ("regrow", "raise"):
+            raise ValueError(f"on_overflow must be 'regrow' or 'raise'; "
+                             f"got {on_overflow!r}")
         self.mesh = mesh
         self.chunk_iters = chunk_iters
+        self.on_overflow = on_overflow
         self.dist = None
+
+    def _install_dist(self, dist) -> None:
+        self.dist = dist
+        self._run_chunk = dist.make_run(chunk_iters=self.chunk_iters)
+        self._one_step = jax.jit(dist.make_step())
+        self._epi = jax.jit(dist.make_epilogue())
 
     def prepare(self, graph: Graph, activity: Activity) -> EngineState:
         from .distributed import DistributedPsi
@@ -919,11 +960,8 @@ class DistributedEngine(PsiEngine):
         if self.mesh is None:
             self.mesh = jax.make_mesh((len(jax.devices()), 1),
                                       ("data", "model"))
-        self.dist = DistributedPsi.from_graph(graph, activity, self.mesh,
-                                              dtype=self.dtype)
-        self._run_chunk = self.dist.make_run(chunk_iters=self.chunk_iters)
-        self._one_step = jax.jit(self.dist.make_step())
-        self._epi = jax.jit(self.dist.make_epilogue())
+        self._install_dist(DistributedPsi.from_graph(
+            graph, activity, self.mesh, dtype=self.dtype))
         return EngineState(s=self.dist.arrays.c_src)
 
     def step(self, state: EngineState) -> EngineState:
@@ -974,13 +1012,19 @@ class DistributedEngine(PsiEngine):
         so a new edge lands in exactly one block; it is merged dst-sorted
         into that block's host slice (sentinels stay at the tail) and the
         touched block rows + 1/w entries are scattered into the device
-        arrays — no re-partition, no O(M) rebuild. Returns ``False`` only
-        when a block genuinely overflows ``e_max``.
+        arrays — no re-partition, no O(M) rebuild. A genuine ``e_max``
+        block overflow regrows the partition (with a warning naming the
+        block and required capacity) or raises
+        :class:`~repro.core.distributed.BlockOverflowError`, per the
+        engine's ``on_overflow`` option — never a silent no-op.
         """
+        from .distributed import BlockOverflowError, DistributedPsi
         p = self.dist.part
         nc, q = p.nc, p.q
-        src_k, dst_k = self.host.patch_edges(src, dst)
-        self._graph_stale = True
+        # probe (no mutation) first: on_overflow='raise' must leave the
+        # host mirror untouched, or a caught-and-retried patch would dedup
+        # against the half-applied state and silently skip the device insert
+        src_k, dst_k = self.host.filter_new_edges(src, dst)
         if src_k.size == 0:
             return True
         s64 = src_k.astype(np.int64)
@@ -991,12 +1035,34 @@ class DistributedEngine(PsiEngine):
         src_loc = (c_of_src * q + (off - row * q)).astype(np.int32)
         col = d64 // nc
         dst_loc = (d64 - col * nc).astype(np.int32)
-        # capacity pre-check: nothing is mutated on overflow, so the
-        # caller's full re-prepare sees a consistent partition
         add = np.zeros((p.d, p.mo), np.int64)
         np.add.at(add, (row, col), 1)
-        if np.any(p.e_counts + add > p.e_max):
-            return False
+        over = p.e_counts + add > p.e_max
+        if np.any(over):
+            # name the *worst* overflowing block so the reported required
+            # capacity belongs to the block in the message
+            need = p.e_counts + add
+            r_o, c_o = (int(x) for x in
+                        np.unravel_index(int(np.argmax(need)), need.shape))
+            required = int(need[r_o, c_o])
+            if self.on_overflow == "raise":
+                raise BlockOverflowError((r_o, c_o), int(p.e_max), required)
+            import warnings
+            warnings.warn(
+                f"distributed patch_edges: block (row={r_o}, col={c_o}) "
+                f"overflows e_max={int(p.e_max)} (insert requires capacity "
+                f">= {required}); regrowing the partition from the patched "
+                f"graph", RuntimeWarning, stacklevel=2)
+            # commit the edges to the host mirror, then repartition once at
+            # the grown e_max (one retrace, no second data path)
+            self.host.insert_filtered(src_k, dst_k)
+            self._graph_stale = True
+            self._install_dist(DistributedPsi.from_graph(
+                self.graph, self.activity, self.mesh, dtype=self.dtype))
+            self.ops = self.host.to_device(self.dtype)
+            return True
+        self.host.insert_filtered(src_k, dst_k)
+        self._graph_stale = True
         a = self.dist.arrays
         new_src_local, new_dst_local = a.src_local, a.dst_local
         for r, c in {(int(r), int(c)) for r, c in zip(row, col)}:
@@ -1025,4 +1091,105 @@ class DistributedEngine(PsiEngine):
             a, src_local=new_src_local, dst_local=new_dst_local,
             inv_w_src=a.inv_w_src.at[r_g, loc_g].set(vals))
         self.ops = self.host.to_device(self.dtype)   # epilogue consistency
+        return True
+
+
+# --------------------------------------------------------------------- #
+# async — bounded-staleness overlapped chunk scheduler (repro.asyncexec)
+# --------------------------------------------------------------------- #
+@register_backend("async")
+class AsyncEngine(PsiEngine):
+    """Power-ψ through the bounded-staleness chunk scheduler.
+
+    The node set splits into ``num_chunks`` dst-row chunks; each carries an
+    epoch counter and steps against the latest published board without a
+    global barrier — a chunk may run up to ``tau`` epochs ahead of the
+    slowest one (``tau=0`` is exactly the bulk-synchronous schedule).
+    Termination is gated by the stale-corrected Eq. 19 certificate and
+    always sealed by a synchronous verification sweep, so results are
+    interchangeable with every other backend (docs/ASYNC.md).
+
+    ``delay_hook(chunk, epoch) -> seconds`` injects simulated stragglers;
+    ``read_hook(reader, neighbor, epochs) -> lag`` forces reads from the
+    epoch history (the staleness-injection test harness). The gap norm is
+    ``l1`` (what the chunk deltas sum to).
+    """
+
+    def __init__(self, *, num_chunks: int = 4, tau: int = 2,
+                 max_workers: int | None = None, delay_hook=None,
+                 read_hook=None, lane_pad: int = 128, **kw):
+        super().__init__(**kw)
+        if self.criterion.norm != "l1":
+            raise ValueError("async backend sums per-chunk l1 gaps; "
+                             f"got norm={self.criterion.norm!r}")
+        if self.accelerate:
+            raise ValueError(
+                "async backend has no Aitken composition (a mixed-epoch Δ "
+                "is not a contraction sample — see ChunkExtrapolator's "
+                "epoch guard); run accelerate on a synchronous backend")
+        from ..asyncexec.staleness import StalenessBound
+        StalenessBound(tau)                  # validate tau eagerly
+        self.num_chunks = int(num_chunks)
+        self.tau = int(tau)
+        self.max_workers = max_workers
+        self.delay_hook = delay_hook
+        self.read_hook = read_hook
+        self.lane_pad = int(lane_pad)
+        self.sched = None
+        self.chunked = None
+
+    def prepare(self, graph: Graph, activity: Activity) -> EngineState:
+        from ..asyncexec.scheduler import (AsyncChunkScheduler,
+                                           ChunkedOperators)
+        from ..asyncexec.staleness import StalenessBound
+        self._base_prepare(graph, activity)
+        self.chunked = ChunkedOperators(self.host, self.num_chunks,
+                                        dtype=self.dtype,
+                                        lane_pad=self.lane_pad)
+        self.sched = AsyncChunkScheduler(
+            self.chunked, bound=StalenessBound(self.tau),
+            max_workers=self.max_workers, delay_hook=self.delay_hook,
+            read_hook=self.read_hook)
+        return EngineState(s=self.chunked.board0)
+
+    def step(self, state: EngineState) -> EngineState:
+        """One *synchronous* sweep of every chunk — the protocol-level step
+        (the overlap lives in ``run``, not here)."""
+        board, raw = self.sched.sync_sweep(jnp.asarray(state.s))
+        return EngineState(s=board, gap=float(self._scale()) * raw,
+                           t=state.t + 1)
+
+    def run(self, *, tol=None, max_iter=None, s0=None) -> PsiResult:
+        tol, max_iter = self.criterion.resolve(tol, max_iter)
+        self.sched.reset(s0=None if s0 is None
+                         else np.asarray(self._s0_node_order(s0)))
+        out = self.sched.run(tol=tol, max_epochs=max_iter,
+                             scale=float(self._scale()))
+        self.last_run = out                  # staleness/overlap observability
+        s_node = jnp.asarray(self.chunked.node_order(out.s), self.dtype)
+        t = int(out.epochs.max())
+        res = self._result(self.ops.psi_epilogue(s_node), s_node, out.gap,
+                           t, tol)
+        # converged comes from the scheduler, not gap ≤ tol: an epoch-budget
+        # exit reports the latest *stale* gap sum, which may under-report
+        # the true residual and must never claim convergence unverified
+        return dataclasses.replace(
+            res, converged=jnp.asarray(bool(out.converged)),
+            # honest currency: chunk-steps / chunks-per-sweep, + epilogue
+            matvecs=jnp.asarray(
+                -(-out.total_steps // self.num_chunks) + 1, jnp.int32))
+
+    # -- delta hooks (mid-flight capable at the scheduler level) --------- #
+    def patch_activity(self, users, lam=None, mu=None) -> bool:
+        self.host.patch_activity(users, lam=lam, mu=mu)
+        self.ops = self.host.refresh_node_arrays(self.ops, self.dtype)
+        self.sched.patch_node_arrays()
+        return True
+
+    def patch_edges(self, src, dst) -> bool:
+        src, dst = self.host.patch_edges(src, dst)
+        self._graph_stale = True
+        self.ops = self.host.to_device(self.dtype)
+        if src.size:
+            self.sched.patch_edges(src, dst)
         return True

@@ -263,10 +263,13 @@ class HostOperators:
         np.add.at(self.row_lam, fol, np.repeat(dl, counts))
         return int(counts.sum())
 
-    def patch_edges(self, src: np.ndarray,
-                    dst: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """Merge new follow edges; returns the (src, dst) actually inserted
-        (self-loops and duplicates — in-batch or vs existing — are dropped)."""
+    def filter_new_edges(self, src: np.ndarray,
+                         dst: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """The edges :meth:`patch_edges` would actually insert — self-loops
+        and duplicates (in-batch or vs existing) dropped — *without*
+        mutating anything. Capacity pre-checks (e.g. the distributed
+        backend's ``on_overflow='raise'``) rely on probing before the host
+        mirror is committed."""
         src = np.asarray(src, np.int32).reshape(-1)
         dst = np.asarray(dst, np.int32).reshape(-1)
         keep = src != dst
@@ -280,7 +283,20 @@ class HostOperators:
             b = np.searchsorted(self.src_by_src, s, side="right")
             if np.any(self.dst_by_src[a:b] == d):
                 fresh[k] = False
-        src, dst = src[fresh], dst[fresh]
+        return src[fresh], dst[fresh]
+
+    def patch_edges(self, src: np.ndarray,
+                    dst: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Merge new follow edges; returns the (src, dst) actually inserted
+        (self-loops and duplicates — in-batch or vs existing — are dropped)."""
+        src, dst = self.filter_new_edges(src, dst)
+        return self.insert_filtered(src, dst)
+
+    def insert_filtered(self, src: np.ndarray,
+                        dst: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Commit edges that already passed :meth:`filter_new_edges` —
+        callers that probed first (capacity pre-checks) skip the second
+        per-edge dedup scan this way."""
         if src.size == 0:
             return src, dst
         # merge into the dst-sorted view

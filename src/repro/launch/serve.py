@@ -80,6 +80,63 @@ def _serve_fleet(args) -> None:
           + ", ".join(f"{t}/{u}@{s:.2e}" for t, u, s in top))
 
 
+def _serve_driver(args) -> None:
+    """Driver-level ψ serving: the fault-tolerant chunk executors — the
+    bulk-synchronous ``runtime/psi_driver.py`` or the bounded-staleness
+    ``repro.asyncexec`` pipeline — followed by the shared query layer."""
+    import jax
+
+    from ..core import heterogeneous
+    from ..graphs import powerlaw_configuration
+
+    g = powerlaw_configuration(10_000, 70_000, seed=5)
+    act = heterogeneous(g.n, seed=6)
+    tol = 1e-7
+    t0 = time.perf_counter()
+    if args.executor == "async":
+        from ..asyncexec import AsyncPsiDriver
+        drv = AsyncPsiDriver(g, act, num_chunks=args.num_chunks,
+                             tau=args.staleness_tau)
+        rep = drv.run(tol=tol)
+        print(f"[serve] executor=async chunks={args.num_chunks} "
+              f"tau={args.staleness_tau}: {rep.iterations} epochs "
+              f"gap={rep.gap:.2e} in {time.perf_counter() - t0:.2f}s; "
+              f"max_staleness={rep.max_staleness} "
+              f"overlap={rep.overlap_efficiency:.2f}x "
+              f"verify_sweeps={rep.sync_sweeps}")
+    else:
+        from ..core.distributed import DistributedPsi
+        from ..runtime import PsiDriver
+        mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+        drv = PsiDriver(DistributedPsi.from_graph(g, act, mesh),
+                        chunk_iters=16)
+        rep = drv.run(tol=tol)
+        print(f"[serve] executor=sync chunk_iters=16: {rep.iterations} "
+              f"iterations gap={rep.gap:.2e} in "
+              f"{time.perf_counter() - t0:.2f}s")
+    # straggler forensics: measured durations + the deadline that tripped
+    if rep.chunk_durations:
+        durs = np.asarray(rep.chunk_durations)
+        print(f"[serve] {durs.size} chunk steps: median="
+              f"{np.median(durs) * 1e3:.1f} ms max={durs.max() * 1e3:.1f} ms")
+    for ev in rep.slow_chunk_events:
+        print(f"[serve] slow chunk {ev.chunk}: {ev.duration * 1e3:.1f} ms "
+              f"exceeded deadline {ev.deadline * 1e3:.1f} ms")
+    if not rep.slow_chunk_events:
+        print("[serve] no chunk exceeded its deadline")
+    q = rep.queries()
+    rng = np.random.default_rng(0)
+    for r in range(args.requests):
+        users = rng.integers(0, g.n, args.batch)
+        t0 = time.perf_counter()
+        scores = q.scores_batch(users)
+        top, _ = q.top_k(args.top_k)
+        print(f"[serve] req {r}: users={users.tolist()} "
+              f"psi={np.round(scores, 8).tolist()} "
+              f"top-{args.top_k}={top.tolist()} "
+              f"({(time.perf_counter() - t0) * 1e3:.1f} ms)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -109,6 +166,17 @@ def main() -> None:
     ap.add_argument("--bucket-sizes", default=None,
                     help="comma list of node-capacity rungs for the fleet "
                          "bucket policy, e.g. '512,2048,8192'")
+    ap.add_argument("--executor", default=None, choices=("sync", "async"),
+                    help="psi-score only: run the fault-tolerant chunk "
+                         "driver instead of PsiService — sync (bulk-"
+                         "synchronous runtime/psi_driver.py) or async "
+                         "(bounded-staleness repro.asyncexec pipeline; "
+                         "docs/ASYNC.md)")
+    ap.add_argument("--staleness-tau", type=int, default=2,
+                    help="async executor: max epoch lag a chunk may fall "
+                         "behind (0 = barriered, i.e. sync semantics)")
+    ap.add_argument("--num-chunks", type=int, default=4,
+                    help="async executor: dst-row chunks in the pipeline")
     ap.add_argument("--top-k", type=int, default=3)
     args = ap.parse_args()
 
@@ -118,6 +186,10 @@ def main() -> None:
 
     entry = get_arch(args.arch)
     mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+
+    if entry.family == "psi" and args.executor:
+        _serve_driver(args)
+        return
 
     if entry.family == "psi" and args.tenants > 1:
         _serve_fleet(args)

@@ -1,4 +1,5 @@
-"""Fault-tolerant distributed Power-ψ driver.
+"""Fault-tolerant distributed Power-ψ drivers — shared machinery + the
+synchronous bulk-chunk driver.
 
 The fixed point s* is the *entire* algorithm state (O(N) floats) and the
 iteration is a contraction, which yields unusually strong resilience
@@ -11,11 +12,16 @@ properties, all exercised here (and in tests/test_runtime.py):
     (`Partition2D.from_src_layout` → new `to_src_layout`); a job can lose or
     gain pods between chunks and continue warm.
   * **straggler mitigation** — per-chunk deadline tracking flags slow
-    devices (tested via the duration monitor); the escalation path is
-    flag → re-mesh without the straggler (the elastic re-mesh above).
-    Because ρ(A) < 1 the iteration would also tolerate bounded-stale
-    partials (asynchronous fixed-point theory) — noted as the design
-    headroom for a future async executor, not implemented here.
+    devices with the measured duration and the deadline it exceeded; the
+    escalation path is flag → re-mesh without the straggler (the elastic
+    re-mesh above).
+
+Because ρ(A) < 1 the iteration also tolerates bounded-stale partials
+(asynchronous fixed-point theory) — that headroom is now implemented:
+:class:`repro.asyncexec.AsyncPsiDriver` shares the checkpoint + deadline
+machinery of :class:`PsiDriverBase` below but replaces the bulk-synchronous
+chunk barrier with the overlapped bounded-staleness scheduler
+(docs/ASYNC.md).
 """
 from __future__ import annotations
 
@@ -32,7 +38,16 @@ from ..core.engine import ChunkExtrapolator
 from ..core.incremental import RankingCache
 from ..graphs.partition import partition_2d
 
-__all__ = ["PsiDriver", "DriverReport"]
+__all__ = ["PsiDriver", "PsiDriverBase", "DriverReport", "SlowChunk"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SlowChunk:
+    """One deadline violation: which chunk, how slow, against what."""
+
+    chunk: int           # chunk index (sync) / chunk-step index (async)
+    duration: float      # measured wall seconds of the offending chunk
+    deadline: float      # the deadline it exceeded (factor × running median)
 
 
 @dataclasses.dataclass
@@ -43,20 +58,79 @@ class DriverReport:
     restarts: int
     slow_chunks: list[int]
     psi: np.ndarray
+    # straggler forensics (satellite of the async-executor PR): not just
+    # *which* chunks were slow but how slow, and the deadline that tripped
+    chunk_durations: list[float] = dataclasses.field(default_factory=list)
+    slow_chunk_events: list[SlowChunk] = dataclasses.field(
+        default_factory=list)
 
     def queries(self) -> RankingCache:
         """Batched query layer over the converged ψ (shared with PsiService)."""
         return RankingCache(self.psi)
 
 
-class PsiDriver:
+class PsiDriverBase:
+    """Checkpoint + straggler-deadline machinery shared by the synchronous
+    :class:`PsiDriver` and the asynchronous
+    :class:`repro.asyncexec.AsyncPsiDriver`.
+
+    Subclasses call :meth:`_note_duration` once per chunk (or chunk-step)
+    and the :meth:`_ckpt_save` / :meth:`_ckpt_restore_latest` pair around
+    their own state pytrees — what that state *is* (a src-layout vector vs
+    a board + epoch vector) stays backend-specific.
+    """
+
+    def __init__(self, *, ckpt_dir: str | None = None,
+                 deadline_factor: float = 3.0):
+        self.ckpt_dir = ckpt_dir
+        self.deadline_factor = deadline_factor
+        self._reset_tracking()
+
+    # -- straggler deadlines -------------------------------------------- #
+    def _reset_tracking(self) -> None:
+        self._durations: list[float] = []
+        self._slow: list[int] = []
+        self._slow_events: list[SlowChunk] = []
+
+    def _note_duration(self, idx: int, dt: float) -> bool:
+        """Record one chunk duration; returns True (and logs a
+        :class:`SlowChunk`) when it exceeded ``deadline_factor`` × the
+        running median."""
+        slow = False
+        if self._durations:
+            deadline = self.deadline_factor * float(
+                np.median(self._durations))
+            if dt > deadline:
+                slow = True
+                self._slow.append(int(idx))
+                self._slow_events.append(
+                    SlowChunk(int(idx), float(dt), float(deadline)))
+        self._durations.append(float(dt))
+        return slow
+
+    # -- checkpoints ----------------------------------------------------- #
+    def _ckpt_save(self, step: int, tree: dict) -> None:
+        if self.ckpt_dir:
+            checkpoint.save(self.ckpt_dir, step, tree)
+
+    def _ckpt_restore_latest(self, template: dict) -> dict | None:
+        if not self.ckpt_dir:
+            return None
+        step = checkpoint.latest_step(self.ckpt_dir)
+        if step is None:
+            return None
+        return checkpoint.restore(self.ckpt_dir, step, template)
+
+
+class PsiDriver(PsiDriverBase):
+    """Bulk-synchronous chunk driver over :class:`DistributedPsi`."""
+
     def __init__(self, dist: DistributedPsi, *, ckpt_dir: str | None = None,
                  chunk_iters: int = 16, deadline_factor: float = 3.0,
                  accelerate: bool = False):
+        super().__init__(ckpt_dir=ckpt_dir, deadline_factor=deadline_factor)
         self.dist = dist
-        self.ckpt_dir = ckpt_dir
         self.chunk_iters = chunk_iters
-        self.deadline_factor = deadline_factor
         self.accelerate = accelerate         # chunk-level Aitken jumps
         self._warm_s = None                  # set by remesh(): elastic resume
 
@@ -91,28 +165,19 @@ class PsiDriver:
         chunk_idx = 0
         restarts = 0
         gap = float("inf")
-        durations: list[float] = []
-        slow: list[int] = []
-        if self.ckpt_dir:
-            checkpoint.save(self.ckpt_dir, 0, dict(s=s, it=np.int64(0)))
+        self._reset_tracking()
+        self._ckpt_save(0, dict(s=s, it=np.int64(0)))
         while it < max_iter and gap > tol:
             t0 = time.perf_counter()
             s_new, gap_dev = run_chunk(s, dist.arrays)
             jax.block_until_ready(s_new)
-            dt = time.perf_counter() - t0
-            if durations and dt > self.deadline_factor * float(
-                    np.median(durations)):
-                slow.append(chunk_idx)       # straggler flag (see docstring)
-            durations.append(dt)
+            self._note_duration(chunk_idx, time.perf_counter() - t0)
 
             if fail_hook is not None and fail_hook(chunk_idx):
                 restarts += 1
-                if self.ckpt_dir:
-                    step = checkpoint.latest_step(self.ckpt_dir)
-                    data = checkpoint.restore(
-                        self.ckpt_dir, step,
-                        dict(s=np.zeros(np.shape(s), np.float32),
-                             it=np.int64(0)))
+                data = self._ckpt_restore_latest(
+                    dict(s=np.zeros(np.shape(s), np.float32), it=np.int64(0)))
+                if data is not None:
                     s = jax.device_put(
                         data["s"], jax.sharding.NamedSharding(
                             dist.mesh, _src_spec(dist)))
@@ -128,14 +193,14 @@ class PsiDriver:
             s = extrap.advance(s, s_new, gap) if extrap else s_new
             it += self.chunk_iters
             chunk_idx += 1
-            if self.ckpt_dir:
-                checkpoint.save(self.ckpt_dir, it, dict(s=s,
-                                                        it=np.int64(it)))
+            self._ckpt_save(it, dict(s=s, it=np.int64(it)))
         psi_piece = epi(s, dist.arrays)
         psi = dist.part.from_src_layout(
             np.asarray(psi_piece).reshape(dist.part.d, -1))
         return DriverReport(iterations=it, gap=gap, chunks=chunk_idx,
-                            restarts=restarts, slow_chunks=slow, psi=psi)
+                            restarts=restarts, slow_chunks=self._slow,
+                            psi=psi, chunk_durations=self._durations,
+                            slow_chunk_events=self._slow_events)
 
     # ------------------------------------------------------------------ #
     def remesh(self, new_mesh, graph, activity, s_current) -> "PsiDriver":

@@ -1,0 +1,315 @@
+"""Bounded-staleness async executor: certificate math, chunk scheduler,
+driver fault tolerance, and the staleness-injection property harness."""
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.asyncexec import (AsyncChunkScheduler, AsyncPsiDriver,
+                             ChunkedOperators, RhoEstimator, StalenessBound,
+                             certify_gap)
+from repro.core import (Activity, HostOperators, PsiService, build_operators,
+                        exact_psi, heterogeneous, make_engine,
+                        available_backends)
+from repro.core.engine import ChunkExtrapolator
+from repro.graphs import erdos_renyi, powerlaw_configuration
+from repro.graphs.structure import Graph
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                          # dev-only dep
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def platform():
+    g = powerlaw_configuration(400, 2400, seed=50)
+    act = heterogeneous(g.n, seed=51)
+    psi_true, _ = exact_psi(g, act)
+    return g, act, psi_true
+
+
+# --------------------------------------------------------------------- #
+# Staleness model + certificate
+# --------------------------------------------------------------------- #
+def test_certificate_trusts_and_inflates_within_tau():
+    bound = StalenessBound(tau=2)
+    cert = certify_gap([1e-9] * 4, [5, 4, 5, 5], bound=bound, rho=0.5)
+    assert cert.trusted and cert.spread == 1
+    # ρ-inflation: one epoch of spread at ρ=0.5 doubles the certified gap
+    assert cert.certified_gap == pytest.approx(4e-9 * 2.0)
+    assert cert.accepts(1e-7) and not cert.accepts(1e-9)
+
+
+def test_certificate_rejects_tau_violation():
+    """A τ-violating assembly is rejected regardless of its magnitude."""
+    cert = certify_gap([1e-16] * 4, [8, 5, 8, 8],
+                       bound=StalenessBound(tau=2), rho=0.9)
+    assert cert.spread == 3
+    assert not cert.trusted
+    assert not cert.accepts(1.0)
+    # the inflation is still pessimistic (≥ ρ^{-τ})
+    assert cert.certified_gap > cert.raw_gap
+
+
+def test_staleness_bound_validation():
+    with pytest.raises(ValueError, match="tau"):
+        StalenessBound(tau=-1)
+    with pytest.raises(ValueError, match="rho"):
+        StalenessBound(tau=1, rho=1.5)
+    with pytest.raises(ValueError, match="tau"):
+        make_engine("async", tau=-2)
+
+
+def test_rho_estimator_is_conservative():
+    est = RhoEstimator(init=0.9)
+    assert est.value == 0.9
+    for gap in (1.0, 0.5, 0.3, 0.21):        # ratios 0.5, 0.6, 0.7
+        est.update(gap)
+    # min of the recent ratios: under-estimating ρ *grows* the ρ^{-σ}
+    # inflation, which is the safe direction for the certificate
+    assert est.value == pytest.approx(0.5)
+    est.update(1e-6)                         # transient collapse clamps
+    assert est.value >= 0.05
+
+
+# --------------------------------------------------------------------- #
+# Chunk decomposition: one synchronous sweep == one global iteration
+# --------------------------------------------------------------------- #
+def test_sync_sweep_is_one_global_iteration(platform):
+    g, act, _ = platform
+    host = HostOperators.from_graph(g, act)
+    chunked = ChunkedOperators(host, 4)
+    sched = AsyncChunkScheduler(chunked)
+    ops = build_operators(g, act)
+    new, raw = sched.sync_sweep(chunked.board0)
+    s0 = np.asarray(ops.c)
+    s1 = np.asarray(ops.mu * ops.push(jnp.asarray(s0)) + ops.c)
+    # host mirror accumulates in f64 before the device cast, so the chunked
+    # operands can differ from the all-f32 build by an ulp
+    np.testing.assert_allclose(chunked.node_order(new), s1,
+                               rtol=1e-6, atol=1e-9)
+    assert raw == pytest.approx(float(np.abs(s1 - s0).sum()), rel=1e-4)
+
+
+# --------------------------------------------------------------------- #
+# Async engine: parity + straggler absorption
+# --------------------------------------------------------------------- #
+def test_async_backend_registered():
+    assert "async" in available_backends()
+
+
+@pytest.mark.parametrize("tau,chunks", [(0, 4), (1, 3), (2, 4), (3, 7)])
+def test_async_converges_to_sync_fixed_point(platform, tau, chunks):
+    g, act, psi_true = platform
+    eng = make_engine("async", graph=g, activity=act,
+                      num_chunks=chunks, tau=tau)
+    res = eng.run(tol=1e-10)
+    assert bool(res.converged)
+    assert np.abs(np.asarray(res.psi) - psi_true).max() <= 1e-6
+    out = eng.last_run
+    assert out.sync_sweeps >= 1              # termination was sync-verified
+    # observed pipeline skew never exceeds the bound (+1 for the transient
+    # where a τ-ahead chunk publishes before the floor advances)
+    assert out.max_staleness <= tau + 1
+
+
+def test_straggler_absorption(platform):
+    """A permanently slow chunk falls behind instead of stalling every
+    epoch, and the answer is still the synchronous fixed point."""
+    g, act, psi_true = platform
+    eng = make_engine(
+        "async", graph=g, activity=act, num_chunks=4, tau=2,
+        delay_hook=lambda k, e: 0.02 if k == 0 and e <= 8 else 0.0)
+    res = eng.run(tol=1e-9)
+    assert bool(res.converged)
+    assert np.abs(np.asarray(res.psi) - psi_true).max() <= 1e-6
+    assert eng.last_run.max_staleness >= 1   # the pipeline actually skewed
+
+
+def test_async_rejects_accelerate_and_bad_norm():
+    with pytest.raises(ValueError, match="Aitken"):
+        make_engine("async", accelerate=True)
+    from repro.core import ConvergenceCriterion
+    with pytest.raises(ValueError, match="l1"):
+        make_engine("async", criterion=ConvergenceCriterion(norm="l2"))
+
+
+def test_async_service_delta_roundtrip(platform):
+    """PsiService over the async backend: warm re-solves through the O(Δ)
+    patch hooks stay exact."""
+    g, act, _ = platform
+    svc = PsiService(g, act, tol=1e-9, backend="async",
+                     engine_opts=dict(num_chunks=4, tau=2))
+    svc.scores()
+    u = 9
+    svc.update_activity(np.asarray([u]), lam=np.asarray([4.0]))
+    lam2 = act.lam.copy()
+    lam2[u] = 4.0
+    psi_true, _ = exact_psi(g, Activity(lam2, act.mu))
+    assert np.abs(svc.scores() - psi_true).max() <= 1e-6
+
+
+def test_async_engine_patch_edges_including_regrow(platform):
+    """Edge patches land in the touched chunks; overflowing a chunk's
+    lane-padded e_max regrows the chunk format and stays exact."""
+    g, act, _ = platform
+    eng = make_engine("async", graph=g, activity=act, num_chunks=4,
+                      tau=2, lane_pad=8)
+    prev = eng.run(tol=1e-9)
+    e_max_before = eng.chunked.e_max
+    rng = np.random.default_rng(3)
+    existing = set(zip(g.src.tolist(), g.dst.tolist()))
+    pairs = set()
+    while len(pairs) < e_max_before + 16:    # force chunk-0 overflow
+        s, d = int(rng.integers(0, g.n)), int(rng.integers(0, eng.chunked.q))
+        if s != d and (s, d) not in existing:
+            pairs.add((s, d))
+    src = np.asarray([p[0] for p in sorted(pairs)], np.int32)
+    dst = np.asarray([p[1] for p in sorted(pairs)], np.int32)
+    assert eng.patch_edges(src, dst) is True
+    assert eng.chunked.e_max > e_max_before
+    res = eng.run(tol=1e-9, s0=prev.s)
+    g2 = Graph(g.n, np.concatenate([g.src, src]),
+               np.concatenate([g.dst, dst])).dedup()
+    psi_true, _ = exact_psi(g2, act)
+    assert np.abs(np.asarray(res.psi) - psi_true).max() <= 1e-6
+
+
+def test_midflight_patch_without_drain(platform):
+    """An activity patch applied from the epoch callback (pipeline live,
+    nothing drained) re-converges to the patched fixed point."""
+    g, act, _ = platform
+    host = HostOperators.from_graph(g, act)
+    chunked = ChunkedOperators(host, 4)
+    sched = AsyncChunkScheduler(chunked, bound=StalenessBound(2))
+    state = {"applied": False}
+
+    def on_epoch(s, min_epoch):
+        if min_epoch >= 2 and not state["applied"]:
+            state["applied"] = True
+            host.patch_activity(np.asarray([7]), lam=np.asarray([6.0]))
+            s.patch_node_arrays()
+
+    out = sched.run(tol=1e-11, epoch_callback=on_epoch)
+    assert state["applied"] and out.converged
+    lam2 = act.lam.copy()
+    lam2[7] = 6.0
+    psi_true, _ = exact_psi(g, Activity(lam2, act.mu))
+    ops2 = HostOperators.from_graph(g, Activity(lam2, act.mu)).to_device()
+    psi = np.asarray(ops2.psi_epilogue(
+        jnp.asarray(chunked.node_order(out.s))))
+    assert np.abs(psi - psi_true).max() <= 1e-7
+
+
+# --------------------------------------------------------------------- #
+# AsyncPsiDriver: checkpoint/restart with epoch vectors, elastic rechunk,
+# straggler forensics
+# --------------------------------------------------------------------- #
+def test_async_driver_checkpoint_restart(platform):
+    g, act, psi_true = platform
+    with tempfile.TemporaryDirectory() as d:
+        drv = AsyncPsiDriver(g, act, num_chunks=4, tau=1, ckpt_dir=d,
+                             ckpt_every=2)
+        rep = drv.run(tol=1e-7, fail_hook=lambda t: t in (3, 6))
+        assert rep.restarts == 2
+        assert rep.gap <= 1e-7
+        assert np.abs(rep.psi - psi_true).max() <= 1e-6
+        # the checkpoint carries the epoch vector (async-exact restart)
+        from repro.ckpt import checkpoint
+        step = checkpoint.latest_step(d)
+        data = checkpoint.restore(
+            d, step, dict(s=np.zeros(drv.chunked.n_pad, np.float32),
+                          epochs=np.zeros(4, np.int64), it=np.int64(0)))
+        assert data["epochs"].shape == (4,)
+        assert int(data["epochs"].min()) >= 1
+
+
+def test_async_driver_rechunk_warm(platform):
+    """Elastic re-chunk (the remesh analogue): the board carries across a
+    chunk-count change and the new pipeline resumes warm."""
+    g, act, _ = platform
+    drv = AsyncPsiDriver(g, act, num_chunks=4, tau=2)
+    drv.run(tol=1e-3)                        # partial progress
+    warm = drv.rechunk(6).run(tol=1e-8)
+    cold = AsyncPsiDriver(g, act, num_chunks=6, tau=2).run(tol=1e-8)
+    assert warm.iterations < cold.iterations
+    assert np.abs(warm.psi - cold.psi).max() <= 1e-6
+
+
+def test_async_driver_slow_chunk_forensics(platform):
+    """slow_chunk_events carry the measured duration *and* the deadline it
+    exceeded — not just the chunk index (DriverReport satellite)."""
+    g, act, _ = platform
+    drv = AsyncPsiDriver(
+        g, act, num_chunks=4, tau=2, deadline_factor=3.0,
+        delay_hook=lambda k, e: 0.05 if k == 2 and e >= 5 else 0.0)
+    rep = drv.run(tol=1e-7)
+    assert rep.chunk_durations                 # every step's duration kept
+    assert rep.slow_chunk_events
+    # the delayed chunk must be flagged (thread-timing noise may flag
+    # other chunks too — the forensics, not the order, are the contract)
+    slow_2 = [e for e in rep.slow_chunk_events if e.chunk == 2]
+    assert slow_2 and all(e.duration > e.deadline > 0.0 for e in slow_2)
+    assert max(e.duration for e in slow_2) >= 0.05
+    assert set(rep.slow_chunks) == {e.chunk for e in rep.slow_chunk_events}
+    assert rep.max_staleness >= 1 and rep.tau == 2
+
+
+def test_chunk_extrapolator_epoch_guard():
+    """Aitken jumps only fire on same-epoch endpoint pairs."""
+    def feed(spread):
+        ex = ChunkExtrapolator(1e-12)
+        for k in range(1, 8):                # clean geometric contraction
+            s_in = np.full(4, 1.0 - 0.5 ** (k - 1))
+            s_out = np.full(4, 1.0 - 0.5 ** k)
+            ex.advance(s_in, s_out, gap=0.5 ** k, epoch_spread=spread)
+        return ex.jumps
+
+    assert feed(0) >= 1                      # consistent pairs extrapolate
+    assert feed(1) == 0                      # mixed-epoch pairs never jump
+
+
+# --------------------------------------------------------------------- #
+# Property harness: random bounded staleness ≤ τ still reaches the sync
+# fixed point; τ-violating assemblies are rejected (PR satellite)
+# --------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+
+    @given(st.integers(0, 9_999), st.integers(1, 3))
+    @settings(max_examples=8, deadline=None)
+    def test_bounded_stale_partials_reach_sync_fixed_point(seed, tau):
+        g = erdos_renyi(60, 240, seed=seed % 100)
+        act = heterogeneous(g.n, seed=seed % 97)
+        ref = make_engine("reference", graph=g,
+                          activity=act).run(tol=1e-11)
+        rng = np.random.default_rng(seed)
+
+        def lag_hook(reader, neighbor, epochs):
+            return int(rng.integers(0, tau + 1))   # random staleness ≤ τ
+
+        eng = make_engine("async", graph=g, activity=act, num_chunks=3,
+                          tau=tau, read_hook=lag_hook)
+        res = eng.run(tol=1e-11)
+        assert bool(res.converged)
+        assert np.abs(np.asarray(res.psi)
+                      - np.asarray(ref.psi)).max() <= 1e-6
+
+    @given(st.integers(0, 3), st.integers(1, 6), st.integers(0, 20))
+    @settings(max_examples=20, deadline=None)
+    def test_certificate_rejects_any_tau_violation(tau, excess, base_epoch):
+        """For every τ, any epoch assembly whose spread exceeds τ is
+        rejected; any within-τ assembly is trusted and ρ-inflated."""
+        bound = StalenessBound(tau=tau)
+        bad = certify_gap(
+            [1e-12] * 3, [base_epoch + tau + excess, base_epoch,
+                          base_epoch + 1], bound=bound, rho=0.8)
+        assert not bad.trusted and not bad.accepts(1.0)
+        ok = certify_gap([1e-12] * 3,
+                         [base_epoch + tau, base_epoch, base_epoch],
+                         bound=bound, rho=0.8)
+        assert ok.trusted
+        assert ok.certified_gap == pytest.approx(
+            3e-12 * 0.8 ** (-float(tau)))

@@ -9,7 +9,8 @@ from repro.core import (Activity, heterogeneous, homogeneous, exact_psi,
                         PsiService, HostOperators, build_operators, power_psi)
 from repro.graphs.structure import Graph
 
-BACKENDS = ["reference", "pallas", "auto", "accelerated", "distributed"]
+BACKENDS = ["reference", "pallas", "auto", "accelerated", "distributed",
+            "async"]
 
 
 @pytest.fixture(scope="module")
@@ -428,23 +429,78 @@ def test_distributed_patch_edges_block_local(platform, monkeypatch):
     assert np.abs(np.asarray(res.psi) - psi_true).max() <= 1e-6
 
 
-def test_distributed_patch_edges_overflow_returns_false():
-    """A full block (e_max exhausted) is a genuine overflow: the hook
-    reports False and the service-level fallback re-prepares correctly."""
+def test_distributed_patch_edges_overflow_regrows_with_warning():
+    """A full block (e_max exhausted) is a genuine overflow: the default
+    hook regrows the partition in place — warning with the overflowing
+    block and required capacity, never a silent no-op — and stays exact."""
     g = erdos_renyi(100, 256, seed=6)              # e_max == m: zero slack
     act = heterogeneous(g.n, seed=7)
     eng = make_engine("distributed", graph=g, activity=act,
                       mesh=_mesh_1x1())
-    eng.run(tol=1e-9)
+    prev = eng.run(tol=1e-9)
     assert int(eng.dist.part.e_max) == g.m
-    assert eng.patch_edges(np.asarray([0]), np.asarray([50])) is False
-    svc = PsiService(g, act, tol=1e-9, backend="distributed",
-                     engine_opts=dict(mesh=_mesh_1x1()))
-    svc.add_edges(np.asarray([0]), np.asarray([50]))
+    with pytest.warns(RuntimeWarning,
+                      match=r"block \(row=0, col=0\).*e_max=256.*>= 257"):
+        assert eng.patch_edges(np.asarray([0]), np.asarray([50])) is True
+    assert int(eng.dist.part.e_max) > g.m          # capacity actually grew
+    res = eng.run(tol=1e-9, s0=prev.s)
     g2 = Graph(g.n, np.concatenate([g.src, [0]]),
                np.concatenate([g.dst, [50]])).dedup()
     psi_true, _ = exact_psi(g2, act)
+    assert np.abs(np.asarray(res.psi) - psi_true).max() <= 1e-6
+    # service path rides the regrow transparently
+    svc = PsiService(g, act, tol=1e-9, backend="distributed",
+                     engine_opts=dict(mesh=_mesh_1x1()))
+    svc.scores()
+    with pytest.warns(RuntimeWarning):
+        svc.add_edges(np.asarray([0]), np.asarray([50]))
     assert np.abs(svc.scores() - psi_true).max() <= 1e-6
+
+
+def test_distributed_patch_edges_overflow_raise_mode():
+    """on_overflow='raise' names the overflowing block and the capacity the
+    insert needs (for callers that budget e_max themselves)."""
+    from repro.core.distributed import BlockOverflowError
+    g = erdos_renyi(100, 256, seed=6)
+    act = heterogeneous(g.n, seed=7)
+    eng = make_engine("distributed", graph=g, activity=act,
+                      mesh=_mesh_1x1(), on_overflow="raise")
+    eng.run(tol=1e-9)
+    with pytest.raises(BlockOverflowError,
+                       match=r"\(row=0, col=0\).*capacity >= 257") as ei:
+        eng.patch_edges(np.asarray([0]), np.asarray([50]))
+    assert ei.value.block == (0, 0)
+    assert ei.value.e_max == 256 and ei.value.required == 257
+    # the probe mutated nothing: the host mirror still matches the
+    # unpatched graph, so a caught raise leaves the engine consistent
+    assert eng.graph.m == g.m
+    res = eng.run(tol=1e-9)
+    psi_unpatched, _ = exact_psi(g, act)
+    assert np.abs(np.asarray(res.psi) - psi_unpatched).max() <= 1e-6
+    with pytest.raises(ValueError, match="on_overflow"):
+        make_engine("distributed", on_overflow="explode")
+
+
+def test_distributed_dispatch_finalize_compose(platform):
+    """make_dispatch ∘ make_finalize reproduces the fused make_step — the
+    explicit PartialReduction boundary the overlapped executors build on."""
+    import jax
+    from repro.core.distributed import DistributedPsi
+    g, act, _, _ = platform
+    dist = DistributedPsi.from_graph(g, act, _mesh_1x1())
+    step = jax.jit(dist.make_step())
+    dispatch = jax.jit(dist.make_dispatch())
+    finalize = jax.jit(dist.make_finalize())
+    s = dist.arrays.c_src
+    for _ in range(3):
+        s_fused, gap_fused = step(s, dist.arrays)
+        handle = dispatch(s, dist.arrays)
+        s_split, gap_split = finalize(handle, dist.arrays)
+        np.testing.assert_allclose(np.asarray(s_split),
+                                   np.asarray(s_fused), rtol=1e-7, atol=0)
+        assert float(gap_split) == pytest.approx(float(gap_fused),
+                                                 rel=1e-6)
+        s = s_fused
 
 
 def test_distributed_chunk_accelerate(platform):
