@@ -22,6 +22,13 @@ replaces it), so speedups and regressions are measured, not asserted:
   overlapped (``tau=2``) under a rotating simulated straggler, at matched
   tolerance (acceptance: ≥ 1.3× wall-clock for the overlapped pipeline,
   psi_err vs the synchronous reference recorded and ≤ 1e-8).
+* ``streaming`` — the ingestion benchmark (docs/STREAMING.md): a
+  flash-crowd event log (posts/reposts/follows/unfollow tombstones)
+  replayed through the ``StreamIngestor`` over a float64 ``PsiService``
+  under the freshness policy; records sustained events/s, resolves,
+  max top-k churn between resolves, and psi_err of the streamed fixed
+  point vs a from-scratch batch solve on the final (graph,
+  estimated-activity) state (acceptance: psi_err ≤ 1e-6).
 
 Run via ``python -m benchmarks.run --only trajectory`` (add ``--quick`` for
 the CI smoke sizes).
@@ -245,6 +252,48 @@ def run(quick: bool = False, json_path: str = JSON_PATH) -> list[dict]:
     emit("trajectory/fleet/tenants_per_s", T / fleet_wall * 1.0,
          f"solo={T / solo_wall:.1f}/s;speedup={solo_wall / fleet_wall:.2f}x"
          f";psi_err={psi_err:.1e}")
+
+    # ---- streaming trajectory: event ingest → O(Δ) patches → fresh ψ --- #
+    from repro.core import Activity, RATE_FLOOR, PsiService
+    from repro.stream import (FreshnessPolicy, StreamIngestor,
+                              flash_crowd_stream)
+
+    n_s, m_s, ev_s = ((1_000, 6_000, 2_000) if quick
+                      else (3_000, 20_000, 10_000))
+    tol_s = 1e-9
+    g_s = powerlaw_configuration(n_s, m_s, seed=44)
+    truth = heterogeneous(n_s, seed=45)
+    horizon = ev_s / float(truth.total.sum())
+    log = flash_crowd_stream(g_s, truth, horizon, new_followers=n_s // 16,
+                             churn=0.3, seed=46)
+    cold = Activity(np.full(n_s, RATE_FLOOR), np.full(n_s, RATE_FLOOR))
+    svc = PsiService(g_s, cold, tol=tol_s, dtype=jnp.float64)
+    ing = StreamIngestor(
+        svc, half_life=horizon / 2,
+        policy=FreshnessPolicy(coalesce=64, resolve_every=len(log) // 8))
+    t0 = time.perf_counter()
+    srep = ing.ingest(log)
+    stream_wall = time.perf_counter() - t0
+    psi_batch = np.asarray(make_engine(
+        "reference", graph=svc.graph, activity=svc.engine.activity,
+        dtype=jnp.float64).run(tol=tol_s).psi)
+    psi_err = float(np.abs(svc.scores() - psi_batch).max())
+    churn_max = max(ing.churn_history, default=0.0)
+    last = svc.last_result           # measured, final-resolve values
+    entries.append(dict(
+        graph="streaming", backend="ingest[reference]", regime="flash_crowd",
+        n=n_s, m=svc.graph.m, dtype="float64", tol=tol_s, wall_s=stream_wall,
+        iterations=int(last.iterations), matvecs=int(last.matvecs),
+        converged=bool(last.converged), gap=float(last.gap),
+        events=int(srep.events_total),
+        events_per_s=srep.events_total / stream_wall,
+        resolves=int(srep.resolves), topk_churn_max=churn_max,
+        psi_err=psi_err))
+    emit("trajectory/streaming/events_per_s",
+         srep.events_total / stream_wall,
+         f"{srep.events_total} events;{srep.resolves} resolves"
+         f";psi_err={psi_err:.1e};churn_max={churn_max:.2f}"
+         " (psi_err<=1e-6 = acceptance)")
 
     _append_run(entries, json_path, quick)
     return entries

@@ -106,22 +106,48 @@ class AsyncPsiDriver(PsiDriverBase):
         if src.size:
             self.sched.patch_edges(src, dst)
 
+    def remove_edges(self, src, dst) -> None:
+        """Unfollow tombstones: delete from the host mirror and rebuild the
+        touched chunks (same generation-guarded path as an insert)."""
+        src, dst = self.host.remove_edges(src, dst)
+        if src.size:
+            self.ops = self.host.to_device(self.dtype)
+            self.sched.patch_edges(src, dst)
+
     # -- execution ------------------------------------------------------- #
     def run(self, *, tol: float = 1e-8, max_iter: int = 2000,
-            fail_hook: Callable[[int], bool] | None = None
-            ) -> AsyncDriverReport:
+            fail_hook: Callable[[int], bool] | None = None,
+            epoch_hook: Callable[[int], None] | None = None,
+            warm: bool = False) -> AsyncDriverReport:
         """Drive the pipeline to a certified + sync-verified ``tol``.
 
         The gap convention matches ``PsiDriver.run``: raw l1 (no ‖B‖
         scaling). ``max_iter`` bounds per-chunk epochs — comparable to the
         sync driver's iteration budget since one epoch of every chunk is
         one global iteration's worth of work.
+
+        ``epoch_hook(min_epoch)`` fires on every epoch-floor advance and
+        may call the driver's generation-guarded patch hooks
+        (``patch_activity`` / ``patch_edges`` / ``remove_edges``) while the
+        pipeline is live — the streaming ingestor's mid-flight entry point
+        (repro.stream): a patch marks in-flight gap records untrusted, so
+        termination is always certified on the *patched* operators.
+
+        ``warm=True`` restarts the pipeline from the current board instead
+        of the cold s₀ = c — the serving re-resolve path after O(Δ)
+        patches (a ``rechunk`` warm carry, when staged, takes precedence).
         """
         sched = self.sched
         self._reset_tracking()
         if self._warm_s is not None:
             sched.reset(s0=self._warm_s)     # one-shot, like PsiDriver
             self._warm_s = None
+        elif warm:
+            # serving re-resolve: restart the pipeline from the current
+            # board (≈ the previous fixed point after an O(Δ) patch) — the
+            # streaming ingestor's warm path. The first run's board is
+            # still the cold s₀ = c, so warm=True is always safe.
+            sched.reset(s0=np.asarray(self.chunked.node_order(sched.board)))
         else:
             sched.reset()
         restarts = 0
@@ -133,6 +159,8 @@ class AsyncPsiDriver(PsiDriverBase):
         def on_epoch(s: AsyncChunkScheduler, min_epoch: int) -> None:
             nonlocal restarts, tick, last_ckpt
             tick += 1
+            if epoch_hook is not None:
+                epoch_hook(min_epoch)
             if self.ckpt_dir and min_epoch >= last_ckpt + self.ckpt_every:
                 self._ckpt_save(min_epoch, dict(**s.export_state(),
                                                 it=np.int64(min_epoch)))

@@ -1,5 +1,5 @@
 """ψ-score core: the paper's contribution (Power-ψ) plus baselines."""
-from .activity import Activity, heterogeneous, homogeneous
+from .activity import Activity, RATE_FLOOR, heterogeneous, homogeneous
 from .operators import (PsiOperators, HostOperators, build_operators,
                         dense_operators)
 from .power_psi import PsiResult, power_psi, power_psi_fixed
@@ -14,7 +14,7 @@ from .incremental import PsiService, RankingCache, RankedQueries
 from .accelerated import power_psi_accelerated
 
 __all__ = [
-    "Activity", "heterogeneous", "homogeneous",
+    "Activity", "RATE_FLOOR", "heterogeneous", "homogeneous",
     "PsiOperators", "HostOperators", "build_operators", "dense_operators",
     "PsiResult", "power_psi", "power_psi_fixed",
     "PowerNFResult", "power_nf",

@@ -187,6 +187,12 @@ class PsiEngine(abc.ABC):
         """O(Δ) edge insertion; False → caller must re-``prepare``."""
         return False
 
+    def unpatch_edges(self, src, dst) -> bool:
+        """Edge *removal* (unfollow tombstones); False → caller must
+        re-``prepare`` from a filtered graph. Backends whose device format
+        cannot shrink incrementally keep the default."""
+        return False
+
     # -- shared helpers ------------------------------------------------- #
     @property
     def activity(self) -> Activity:
@@ -615,6 +621,13 @@ class ReferenceEngine(PsiEngine):
         self.host.patch_edges(src, dst)
         self._graph_stale = True
         self.ops = self.host.to_device(self.dtype)   # edge arrays grew
+        return True
+
+    def unpatch_edges(self, src, dst) -> bool:
+        removed, _ = self.host.remove_edges(src, dst)
+        if removed.size:
+            self._graph_stale = True
+            self.ops = self.host.to_device(self.dtype)  # edge arrays shrank
         return True
 
 
@@ -1191,5 +1204,15 @@ class AsyncEngine(PsiEngine):
         self._graph_stale = True
         self.ops = self.host.to_device(self.dtype)
         if src.size:
+            self.sched.patch_edges(src, dst)
+        return True
+
+    def unpatch_edges(self, src, dst) -> bool:
+        src, dst = self.host.remove_edges(src, dst)
+        if src.size:
+            self._graph_stale = True
+            self.ops = self.host.to_device(self.dtype)
+            # same touched-chunk rebuild as an insert: the scheduler's
+            # patch hook re-reads the (already shrunk) host mirror
             self.sched.patch_edges(src, dst)
         return True

@@ -134,6 +134,7 @@ class PsiService(RankedQueries):
             dtype=dtype or jnp.float32, **opts)
         self._last: PsiResult | None = None
         self._cache: RankingCache | None = None
+        self._pending = False            # deferred patches awaiting resolve
 
     @classmethod
     def from_fleet(cls, fleet, tenant_id: str):
@@ -162,22 +163,79 @@ class PsiService(RankedQueries):
         self._query()
         return int(self._last.iterations)
 
+    @property
+    def last_result(self) -> PsiResult | None:
+        """The most recent solve's :class:`PsiResult` (None before the
+        first solve) — measured gap/converged/matvecs observability for
+        serving and benchmark code; does not trigger a solve."""
+        return self._last
+
     # -- mutations (each warm-starts from the previous s*) --------------- #
+    # ``resolve=False`` defers the warm re-solve: patches accumulate at the
+    # engine level and the *stale* RankingCache keeps serving until
+    # :meth:`resolve` — the contract the streaming ingestor's freshness
+    # policy is built on (repro.stream; staleness is certified there).
+    # An empty delta is a true no-op: no engine touch, no cache epoch
+    # invalidation, no spurious re-solve (the ingestor coalesces event
+    # windows that may net out to nothing).
     def update_activity(self, users: np.ndarray, lam: np.ndarray | None = None,
-                        mu: np.ndarray | None = None) -> None:
+                        mu: np.ndarray | None = None, *,
+                        resolve: bool = True) -> None:
+        users = np.asarray(users).reshape(-1)
+        if users.size == 0:
+            return
         if not self._engine.patch_activity(users, lam=lam, mu=mu):
             self._full_rebuild(activity=self._patched_activity(users, lam, mu))
-        self._resolve()
+        self._pending = True
+        if resolve:
+            self._resolve()
 
-    def add_edges(self, src: np.ndarray, dst: np.ndarray) -> None:
+    def add_edges(self, src: np.ndarray, dst: np.ndarray, *,
+                  resolve: bool = True) -> None:
+        src = np.asarray(src, np.int32).reshape(-1)
+        dst = np.asarray(dst, np.int32).reshape(-1)
+        if src.size == 0:
+            return
         if not self._engine.patch_edges(src, dst):
             g = self._engine.graph
             merged = Graph(
-                g.n, np.concatenate([g.src, np.asarray(src, np.int32)]),
-                np.concatenate([g.dst, np.asarray(dst, np.int32)]),
+                g.n, np.concatenate([g.src, src]),
+                np.concatenate([g.dst, dst]),
                 name=g.name).dedup()
             self._full_rebuild(graph=merged)
-        self._resolve()
+        self._pending = True
+        if resolve:
+            self._resolve()
+
+    def remove_edges(self, src: np.ndarray, dst: np.ndarray, *,
+                     resolve: bool = True) -> None:
+        """Delete follow edges (unfollow tombstones); pairs not present are
+        ignored. Backends without an incremental shrink hook re-``prepare``
+        from the filtered graph (warm start still carries over)."""
+        src = np.asarray(src, np.int32).reshape(-1)
+        dst = np.asarray(dst, np.int32).reshape(-1)
+        if src.size == 0:
+            return
+        if not self._engine.unpatch_edges(src, dst):
+            g = self._engine.graph
+            keep = ~np.isin(g.src.astype(np.int64) * g.n + g.dst,
+                            src.astype(np.int64) * g.n + dst)
+            self._full_rebuild(graph=Graph(g.n, g.src[keep], g.dst[keep],
+                                           name=g.name))
+        self._pending = True
+        if resolve:
+            self._resolve()
+
+    @property
+    def stale(self) -> bool:
+        """True when deferred patches have not been re-solved yet (queries
+        then serve the previous fixed point's ranking)."""
+        return self._pending
+
+    def resolve(self) -> None:
+        """Warm re-solve if any deferred patch is pending (or never solved)."""
+        if self._pending or self._last is None:
+            self._resolve()
 
     # -- internals ------------------------------------------------------ #
     def _patched_activity(self, users, lam, mu) -> Activity:
@@ -199,6 +257,7 @@ class PsiService(RankedQueries):
         self._last = self._engine.run(tol=self.tol, max_iter=self.max_iter,
                                       s0=prev_s)
         self._cache = None                        # ranking invalidated
+        self._pending = False
 
     def _query(self) -> RankingCache:
         if self._last is None:

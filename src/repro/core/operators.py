@@ -172,6 +172,9 @@ class HostOperators:
       * :meth:`patch_edges` — new follow edges are merged into the two sorted
         edge views with ``np.searchsorted`` + ``np.insert`` (one memmove, no
         re-sort of the M existing edges).
+      * :meth:`remove_edges` — unfollow tombstones delete from both sorted
+        views; touched followers' ``w``/``row_lam`` are recomputed exactly
+        (a follower losing its last leader must hit w = 0, not a residue).
 
     ``to_device`` materializes a fresh :class:`PsiOperators` from the current
     arrays; the float64 host accumulators keep repeated incremental patches
@@ -312,6 +315,56 @@ class HostOperators:
         # rate accumulators: each new edge (j → i) adds i's rates to j's feed
         np.add.at(self.w, src, self.lam[dst] + self.mu[dst])
         np.add.at(self.row_lam, src, self.lam[dst])
+        return src, dst
+
+    def remove_edges(self, src: np.ndarray,
+                     dst: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Delete existing follow edges; returns the (src, dst) actually
+        removed (pairs not present are ignored — an unfollow tombstone may
+        refer to an edge that never materialized or was already dropped).
+
+        O(Δ·log M) searches plus one memmove per sorted view. The touched
+        followers' ``w`` / ``row_lam`` accumulators are *recomputed* from
+        their remaining leader lists rather than decremented: a follower
+        whose last leader disappears must land on w = 0 **exactly** (the
+        masked reciprocal treats w ≤ 0 as "no feed"), and a float64
+        subtraction of previously-added totals can leave a tiny residue
+        whose reciprocal would be catastrophic.
+        """
+        src = np.asarray(src, np.int32).reshape(-1)
+        dst = np.asarray(dst, np.int32).reshape(-1)
+        if src.size:
+            key = src.astype(np.int64) * self.n + dst
+            _, uniq = np.unique(key, return_index=True)
+            src, dst = src[uniq], dst[uniq]
+        hit_s: list[int] = []
+        hit = np.zeros(src.size, bool)
+        for k, (s, d) in enumerate(zip(src, dst)):   # Δ is small in serving
+            a = np.searchsorted(self.src_by_src, s, side="left")
+            b = np.searchsorted(self.src_by_src, s, side="right")
+            j = np.nonzero(self.dst_by_src[a:b] == d)[0]
+            if j.size:
+                hit_s.append(int(a + j[0]))
+                hit[k] = True
+        src, dst = src[hit], dst[hit]
+        if src.size == 0:
+            return src, dst
+        hit_d: list[int] = []
+        for s, d in zip(src, dst):
+            a = np.searchsorted(self.dst_by_dst, d, side="left")
+            b = np.searchsorted(self.dst_by_dst, d, side="right")
+            j = np.nonzero(self.src_by_dst[a:b] == s)[0]
+            hit_d.append(int(a + j[0]))
+        self.src_by_src = np.delete(self.src_by_src, hit_s)
+        self.dst_by_src = np.delete(self.dst_by_src, hit_s)
+        self.src_by_dst = np.delete(self.src_by_dst, hit_d)
+        self.dst_by_dst = np.delete(self.dst_by_dst, hit_d)
+        for j in np.unique(src):
+            a = np.searchsorted(self.src_by_src, j, side="left")
+            b = np.searchsorted(self.src_by_src, j, side="right")
+            leaders = self.dst_by_src[a:b]
+            self.w[j] = float((self.lam[leaders] + self.mu[leaders]).sum())
+            self.row_lam[j] = float(self.lam[leaders].sum())
         return src, dst
 
     # ------------------------------------------------------------------ #

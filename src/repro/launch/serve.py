@@ -80,6 +80,79 @@ def _serve_fleet(args) -> None:
           + ", ".join(f"{t}/{u}@{s:.2e}" for t, u, s in top))
 
 
+def _serve_stream(args) -> None:
+    """Streaming ψ serving: a live event log (posts / reposts / follows /
+    unfollows) drives online λ/μ estimation and coalesced O(Δ) patches
+    against a PsiService; the freshness policy decides when to re-resolve
+    versus serve the existing ranking with certified staleness
+    (docs/STREAMING.md)."""
+    import jax.numpy as jnp
+
+    from ..core import Activity, PsiService, RATE_FLOOR, heterogeneous, \
+        make_engine
+    from ..graphs import powerlaw_configuration
+    from ..stream import (FreshnessPolicy, StreamIngestor, burst_stream,
+                          flash_crowd_stream, poisson_stream)
+
+    n, m = 2_000, 12_000
+    g = powerlaw_configuration(n, m, seed=7)
+    truth = heterogeneous(n, seed=8)
+    horizon = args.stream_events / float(truth.total.sum())
+    if args.stream == "poisson":
+        log = poisson_stream(truth, horizon, seed=9, graph=g)
+    elif args.stream == "burst":
+        rng = np.random.default_rng(9)
+        log = burst_stream(truth, horizon, seed=9,
+                           burst_users=rng.integers(0, n, 16),
+                           burst_factor=10.0)
+    else:
+        log = flash_crowd_stream(g, truth, horizon, seed=9,
+                                 new_followers=96, churn=0.3)
+    backend = args.backend or "reference"
+    # the platform starts cold: every user at the RATE_FLOOR clamp; the
+    # stream teaches the estimator the true rates event by event
+    cold = Activity(np.full(n, RATE_FLOOR), np.full(n, RATE_FLOOR))
+    svc = PsiService(g, cold, tol=1e-8, backend=backend,
+                     check_every=args.check_every, dtype=jnp.float64)
+    half_life = args.half_life if args.half_life else horizon / 2
+    ing = StreamIngestor(
+        svc, half_life=half_life, topk=args.top_k,
+        policy=FreshnessPolicy(coalesce=64,
+                               resolve_every=args.resolve_every))
+    print(f"[serve] stream={args.stream}: {len(log)} events over "
+          f"{horizon:.1f}s event-time ({log.counts()}), half_life="
+          f"{half_life:.1f}s, resolve_every={args.resolve_every} events, "
+          f"backend={svc.backend}")
+    t0 = time.perf_counter()
+    rep = ing.ingest(log)
+    wall = time.perf_counter() - t0
+    print(f"[serve] ingested {rep.events_total} events in {wall:.2f}s "
+          f"({rep.events_total / wall:.0f} ev/s sustained) — "
+          f"{rep.resolves} resolves, top-{args.top_k} churn history "
+          f"{[round(c, 2) for c in ing.churn_history]}")
+    print(f"[serve] freshness: staleness={rep.staleness_events} events / "
+          f"{rep.staleness_seconds:.1f}s, dirty_mass={rep.dirty_mass:.2e}, "
+          f"certified(max_events=0)={rep.certify(max_events=0)}")
+    top, vals = ing.top_k(args.top_k)
+    print(f"[serve] top-{args.top_k}: {top.tolist()}")
+    # parity + estimation quality vs the generator's ground truth
+    batch = make_engine("reference", graph=svc.graph,
+                        activity=svc.engine.activity,
+                        dtype=jnp.float64).run(tol=1e-8)
+    err = float(np.abs(svc.scores() - np.asarray(batch.psi)).max())
+    lam_hat, mu_hat = ing.estimator().rates()
+    rate_err = (np.abs(lam_hat - truth.lam).sum()
+                + np.abs(mu_hat - truth.mu).sum()) \
+        / float(truth.total.sum())
+    # Poisson information floor: ~0.8·√(2n/events) l1 relative error is the
+    # best ANY estimator can do from this many events over this many users
+    floor = 0.8 * (2 * n / max(1, rep.events_total)) ** 0.5
+    print(f"[serve] psi parity vs from-scratch batch: {err:.2e}; "
+          f"estimator l1 rate err vs ground truth: {rate_err:.1%} "
+          f"(Poisson information floor at {len(log)} events / {n} users "
+          f"≈ {floor:.0%})")
+
+
 def _serve_driver(args) -> None:
     """Driver-level ψ serving: the fault-tolerant chunk executors — the
     bulk-synchronous ``runtime/psi_driver.py`` or the bounded-staleness
@@ -177,6 +250,20 @@ def main() -> None:
                          "behind (0 = barriered, i.e. sync semantics)")
     ap.add_argument("--num-chunks", type=int, default=4,
                     help="async executor: dst-row chunks in the pipeline")
+    ap.add_argument("--stream", default=None,
+                    choices=("poisson", "burst", "flash"),
+                    help="psi-score only: replay a synthetic live event "
+                         "log (posts/reposts/follows) through the "
+                         "StreamIngestor → online λ/μ estimation → "
+                         "continuously-fresh ψ (docs/STREAMING.md)")
+    ap.add_argument("--stream-events", type=int, default=4_000,
+                    help="approximate event count of the synthetic stream")
+    ap.add_argument("--half-life", type=float, default=None,
+                    help="estimator decay half-life in event-time seconds "
+                         "(default: half the stream horizon)")
+    ap.add_argument("--resolve-every", type=int, default=1_000,
+                    help="freshness policy: re-resolve psi every N "
+                         "ingested events (serve stale in between)")
     ap.add_argument("--top-k", type=int, default=3)
     args = ap.parse_args()
 
@@ -186,6 +273,10 @@ def main() -> None:
 
     entry = get_arch(args.arch)
     mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+
+    if entry.family == "psi" and args.stream:
+        _serve_stream(args)
+        return
 
     if entry.family == "psi" and args.executor:
         _serve_driver(args)

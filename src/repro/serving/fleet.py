@@ -285,9 +285,17 @@ class TenantFleet:
 
     def patch_activity(self, tenant_id: str, users, lam=None,
                        mu=None) -> None:
-        """O(Δ) λ/μ patch on one tenant; its lane re-solves warm."""
+        """O(Δ) λ/μ patch on one tenant; its lane re-solves warm.
+
+        An empty user set is a true no-op — the tenant stays clean, its
+        epoch does not advance and no lane refresh is scheduled (the
+        streaming ingestor's empty coalescing windows rely on this).
+        """
+        users = np.asarray(users).reshape(-1)
+        if users.size == 0:
+            return
         rec = self._rec(tenant_id)
-        rec.host.patch_activity(np.asarray(users), lam=lam, mu=mu)
+        rec.host.patch_activity(users, lam=lam, mu=mu)
         self._mark_dirty(rec, "activity")
 
     def patch_edges(self, tenant_id: str, src, dst) -> None:
@@ -306,6 +314,21 @@ class TenantFleet:
             self._join_bucket(rec)
         else:
             self._mark_dirty(rec, "edges")
+
+    def remove_edges(self, tenant_id: str, src, dst) -> None:
+        """Edge removal (unfollow tombstones) on one tenant; absent pairs
+        are ignored. Shrinking never rebuckets — the bucket spec is an
+        upper bound — so this is always a lane-local refresh."""
+        rec = self._rec(tenant_id)
+        kept_src, _ = rec.host.remove_edges(np.asarray(src, np.int32),
+                                            np.asarray(dst, np.int32))
+        if kept_src.size == 0:
+            return
+        self._mark_dirty(rec, "edges")
+
+    def activity(self, tenant_id: str) -> Activity:
+        """The tenant's current λ/μ rates (host-mirror copy)."""
+        return self._rec(tenant_id).host.activity()
 
     def invalidate(self) -> None:
         """Forget all solver state: the next solve is cold (s₀ = c).
@@ -713,6 +736,9 @@ class TenantView(RankedQueries):
 
     def add_edges(self, src, dst) -> None:
         self._fleet.patch_edges(self.tenant_id, src, dst)
+
+    def remove_edges(self, src, dst) -> None:
+        self._fleet.remove_edges(self.tenant_id, src, dst)
 
     def last_iterations(self) -> int:
         return self._fleet.last_iterations(self.tenant_id)

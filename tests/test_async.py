@@ -273,6 +273,56 @@ def test_chunk_extrapolator_epoch_guard():
 
 
 # --------------------------------------------------------------------- #
+# Mid-flight streaming: StreamIngestor patches land through the
+# generation-guarded hooks while chunks are in flight (PR satellite)
+# --------------------------------------------------------------------- #
+def _random_event_log(g, seed: int, count: int = 60):
+    """Posts/reposts/follows mixed, monotone timestamps, seeded."""
+    from repro.stream import Follow, Post, ReplayLog, Repost
+    rng = np.random.default_rng(seed)
+    events, t = [], 0.0
+    for _ in range(count):
+        t += float(rng.random())
+        kind = int(rng.integers(0, 4))
+        if kind < 2:
+            events.append(Post(t, int(rng.integers(0, g.n))))
+        elif kind == 2:
+            events.append(Repost(t, int(rng.integers(0, g.n))))
+        else:
+            s, d = (int(x) for x in rng.integers(0, g.n, 2))
+            if s != d:
+                events.append(Follow(t, s, d))
+    return ReplayLog.from_events(events)
+
+
+def test_stream_ingestor_pumps_midflight(platform):
+    """Events pumped from the driver's epoch_hook while the pipeline is
+    live reach the same fixed point as applying them all up front."""
+    from repro.stream import FreshnessPolicy, StreamIngestor
+    g, act, _ = platform
+    log = _random_event_log(g, seed=77, count=80)
+    drv = AsyncPsiDriver(g, act, num_chunks=4, tau=2)
+    ing = StreamIngestor(drv, half_life=30.0,
+                         policy=FreshnessPolicy(coalesce=8,
+                                                resolve_every=None))
+    ing.attach(log)
+    pumped = {"mid": 0}
+
+    def feed(min_epoch):
+        pumped["mid"] += ing.pump(8)
+
+    rep = drv.run(tol=1e-10, epoch_hook=feed)
+    assert pumped["mid"] > 0                   # patches landed mid-flight
+    if not ing.exhausted:                      # converged before the tail
+        while ing.pump(64):
+            pass
+        rep = drv.run(tol=1e-10, warm=True)
+    ref = make_engine("reference", graph=drv.host.graph(),
+                      activity=drv.host.activity()).run(tol=1e-10)
+    assert np.abs(rep.psi - np.asarray(ref.psi)).max() <= 1e-6
+
+
+# --------------------------------------------------------------------- #
 # Property harness: random bounded staleness ≤ τ still reaches the sync
 # fixed point; τ-violating assemblies are rejected (PR satellite)
 # --------------------------------------------------------------------- #
@@ -296,6 +346,37 @@ if HAVE_HYPOTHESIS:
         assert bool(res.converged)
         assert np.abs(np.asarray(res.psi)
                       - np.asarray(ref.psi)).max() <= 1e-6
+
+    @given(st.integers(0, 9_999), st.integers(0, 3))
+    @settings(max_examples=6, deadline=None)
+    def test_midflight_interleave_matches_upfront_fixed_point(seed, tau):
+        """PR satellite: interleaving StreamIngestor patches with
+        AsyncPsiDriver chunks at any staleness ≤ τ reaches the same fixed
+        point as applying every event up front."""
+        from repro.stream import FreshnessPolicy, StreamIngestor
+        g = erdos_renyi(48, 200, seed=seed % 37)
+        act = heterogeneous(g.n, seed=seed % 29)
+        log = _random_event_log(g, seed=seed, count=50)
+        rng = np.random.default_rng(seed + 1)
+
+        def lag_hook(reader, neighbor, epochs):
+            return int(rng.integers(0, tau + 1))   # random staleness ≤ τ
+
+        drv = AsyncPsiDriver(g, act, num_chunks=3, tau=tau,
+                             read_hook=lag_hook)
+        ing = StreamIngestor(drv, half_life=25.0,
+                             policy=FreshnessPolicy(coalesce=8,
+                                                    resolve_every=None))
+        ing.attach(log)
+        rep = drv.run(tol=1e-11, epoch_hook=lambda e: ing.pump(8))
+        if not ing.exhausted:
+            while ing.pump(64):
+                pass
+            rep = drv.run(tol=1e-11, warm=True)
+        # the up-front oracle: every event applied, then one cold solve
+        ref = make_engine("reference", graph=drv.host.graph(),
+                          activity=drv.host.activity()).run(tol=1e-11)
+        assert np.abs(rep.psi - np.asarray(ref.psi)).max() <= 1e-6
 
     @given(st.integers(0, 3), st.integers(1, 6), st.integers(0, 20))
     @settings(max_examples=20, deadline=None)

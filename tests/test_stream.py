@@ -1,0 +1,426 @@
+"""Streaming ingestion subsystem: event log determinism, estimator
+convergence/fixed points, coalesced O(Δ) ingest parity against batch
+recomputation for all three serving targets, unfollow tombstones,
+freshness policy/certification, and the serving-layer satellites
+(activity floor, empty-delta fast paths, edge removal)."""
+import numpy as np
+import pytest
+
+from repro.core import (Activity, HostOperators, PsiService, exact_psi,
+                        heterogeneous, homogeneous, make_engine)
+from repro.core.activity import RATE_FLOOR
+from repro.graphs import erdos_renyi, powerlaw_configuration
+from repro.graphs.structure import Graph
+from repro.stream import (Follow, FreshnessPolicy, FreshnessReport, Post,
+                          RateEstimator, Repost, StreamIngestor, TenantEvent,
+                          Unfollow, burst_stream, flash_crowd_stream,
+                          poisson_stream, tenant_interleave)
+
+
+def cold_activity(n: int) -> Activity:
+    return Activity(np.full(n, RATE_FLOOR), np.full(n, RATE_FLOOR))
+
+
+def batch_psi(graph, activity, *, tol=1e-9):
+    """From-scratch reference solve — the parity oracle."""
+    return np.asarray(make_engine("reference", graph=graph,
+                                  activity=activity).run(tol=tol).psi)
+
+
+# --------------------------------------------------------------------- #
+# Event log
+# --------------------------------------------------------------------- #
+def test_replay_log_is_deterministic_and_reiterable():
+    act = heterogeneous(16, seed=3)
+    a = poisson_stream(act, 50.0, seed=9)
+    b = poisson_stream(act, 50.0, seed=9)
+    assert len(a) > 0 and list(a) == list(b)
+    assert list(a) == list(a)                      # re-iteration is identical
+    ts = [ev.t for ev in a]
+    assert ts == sorted(ts)
+    counts = a.counts()
+    assert set(counts) == {"Post", "Repost"}
+
+
+def test_flash_crowd_contains_follows_and_tombstones():
+    g = powerlaw_configuration(100, 500, seed=4)
+    act = heterogeneous(100, seed=5)
+    log = flash_crowd_stream(g, act, 30.0, new_followers=20, churn=0.5,
+                             seed=6)
+    c = log.counts()
+    assert c.get("Follow", 0) == 20
+    assert c.get("Unfollow", 0) == 10
+    # every tombstone targets an edge a Follow created
+    followed = {(e.follower, e.leader) for e in log
+                if isinstance(e, Follow)}
+    for e in log:
+        if isinstance(e, Unfollow):
+            assert (e.follower, e.leader) in followed
+
+
+def test_tenant_interleave_merges_by_time():
+    act = heterogeneous(8, seed=1)
+    log = tenant_interleave({"a": poisson_stream(act, 20.0, seed=2),
+                             "b": poisson_stream(act, 20.0, seed=3)})
+    ts = [ev.t for ev in log]
+    assert ts == sorted(ts)
+    assert {ev.tenant for ev in log} == {"a", "b"}
+
+
+# --------------------------------------------------------------------- #
+# Estimator: ground-truth rates are fixed points of generate → estimate
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("regime", ["heterogeneous", "homogeneous"])
+def test_estimator_recovers_generator_rates(regime):
+    n = 6
+    truth = (heterogeneous(n, seed=11, low=0.2, high=1.0)
+             if regime == "heterogeneous" else homogeneous(n))
+    horizon = 30_000 / float(truth.total.sum())
+    log = poisson_stream(truth, horizon, seed=12)
+    est = RateEstimator(n, half_life=horizon)
+    for ev in log:
+        est.observe(ev)
+    lam, mu = est.rates(horizon)
+    err = (np.abs(lam - truth.lam).sum()
+           + np.abs(mu - truth.mu).sum()) / float(truth.total.sum())
+    assert err <= 0.05
+
+
+def test_estimator_cold_start_floor_and_dirty_drain():
+    est = RateEstimator(4, half_life=10.0)
+    lam, mu = est.rates(0.0)
+    assert np.all(lam == RATE_FLOOR) and np.all(mu == RATE_FLOOR)
+    assert est.dirty.size == 0 and est.pending_mass() == 0.0
+    est.observe(Post(1.0, 2))
+    est.observe(Repost(1.5, 2))
+    est.observe(Post(2.0, 0))
+    assert est.dirty.tolist() == [0, 2]
+    assert est.pending_mass(2.0) > 0.0
+    mass_before = est.pending_mass(2.0)
+    users, lam_d, mu_d, mass = est.drain(2.0)
+    assert users.tolist() == [0, 2]
+    assert np.all(lam_d >= RATE_FLOOR) and np.all(mu_d >= RATE_FLOOR)
+    assert mass == pytest.approx(mass_before)   # pre-sync mass rides along
+    # drained → synced: dirty set clears and mass drops to zero
+    assert est.dirty.size == 0 and est.pending_mass(2.0) == 0.0
+    empty, _, _, zero = est.drain()
+    assert empty.size == 0 and zero == 0.0
+
+
+def test_estimator_validation():
+    with pytest.raises(ValueError, match="half_life"):
+        RateEstimator(4, half_life=0.0)
+    with pytest.raises(ValueError, match="floor"):
+        RateEstimator(4, floor=0.0)
+    est = RateEstimator(4)
+    with pytest.raises(TypeError, match="Post/Repost"):
+        est.observe(Follow(0.0, 1, 2))
+    with pytest.raises(ValueError, match="out of range"):
+        est.observe(Post(0.0, 7))
+
+
+def test_estimator_half_life_tracks_burst():
+    """A short half-life follows the burst up; the estimate at burst end
+    exceeds the stationary rate."""
+    n = 4
+    truth = Activity(np.full(n, 0.5), np.full(n, 0.5))
+    horizon = 600.0
+    log = burst_stream(truth, horizon, burst_users=np.asarray([1]),
+                       burst_factor=10.0, seed=7)
+    est = RateEstimator(n, half_life=20.0)
+    for ev in log:
+        if ev.t <= 2 * horizon / 3:            # stop at the burst window end
+            est.observe(ev)
+    lam, _ = est.rates(2 * horizon / 3)
+    assert lam[1] > 2.0                        # way above the base 0.5
+    assert lam[0] < 1.5                        # non-burst users stay near base
+
+
+# --------------------------------------------------------------------- #
+# Satellite: Activity floor / validation
+# --------------------------------------------------------------------- #
+def test_activity_accepts_silent_users_and_floors_them():
+    act = Activity(np.asarray([0.0, 0.5]), np.asarray([0.0, 0.5]))
+    assert act.total[0] == 0.0                  # representable (masked c/d)
+    fl = act.floored()
+    assert np.all(fl.lam > 0) and np.all(fl.mu > 0)
+    assert fl.lam[1] == 0.5                     # clamp only lifts zeros
+    with pytest.raises(ValueError, match="floor"):
+        act.floored(0.0)
+    with pytest.raises(ValueError, match="finite"):
+        Activity(np.asarray([np.nan]), np.asarray([1.0]))
+
+
+# --------------------------------------------------------------------- #
+# Satellite: HostOperators edge removal is exact
+# --------------------------------------------------------------------- #
+def test_host_remove_edges_matches_rebuild():
+    g = erdos_renyi(40, 200, seed=13)
+    act = heterogeneous(40, seed=14)
+    host = HostOperators.from_graph(g, act)
+    rng = np.random.default_rng(15)
+    drop = rng.permutation(g.m)[:50]
+    # include every leader of node src[drop[0]] so one follower hits w == 0
+    j = int(g.src[drop[0]])
+    extra = np.nonzero(g.src == j)[0]
+    drop = np.unique(np.concatenate([drop, extra]))
+    removed_src, removed_dst = host.remove_edges(g.src[drop], g.dst[drop])
+    assert removed_src.size == drop.size
+    keep = np.setdiff1d(np.arange(g.m), drop)
+    ref = HostOperators.from_graph(Graph(g.n, g.src[keep], g.dst[keep]), act)
+    np.testing.assert_array_equal(host.src_by_src, ref.src_by_src)
+    np.testing.assert_array_equal(host.dst_by_dst, ref.dst_by_dst)
+    np.testing.assert_allclose(host.w, ref.w, rtol=0, atol=0)
+    np.testing.assert_allclose(host.row_lam, ref.row_lam, rtol=0, atol=0)
+    assert host.w[j] == 0.0                    # exactly zero, no residue
+    # absent pairs are ignored
+    again = host.remove_edges(removed_src[:3], removed_dst[:3])
+    assert again[0].size == 0
+
+
+# --------------------------------------------------------------------- #
+# Satellite: empty-delta fast paths
+# --------------------------------------------------------------------- #
+def test_service_empty_delta_is_a_true_noop():
+    g = erdos_renyi(60, 240, seed=16)
+    svc = PsiService(g, heterogeneous(60, seed=17), tol=1e-8)
+    svc.scores()
+    cache = svc._cache
+    ops = svc.engine.ops
+    svc.update_activity(np.empty(0, np.int64))
+    svc.add_edges(np.empty(0, np.int32), np.empty(0, np.int32))
+    svc.remove_edges(np.empty(0, np.int32), np.empty(0, np.int32))
+    assert svc._cache is cache                 # ranking epoch untouched
+    assert svc.engine.ops is ops               # HostOperators not re-uploaded
+    assert not svc.stale
+
+
+def test_fleet_empty_activity_patch_keeps_tenant_clean():
+    from repro.serving import TenantFleet
+    g = erdos_renyi(50, 200, seed=18)
+    fleet = TenantFleet(backend="dense", tol=1e-7)
+    fleet.admit("t0", g, heterogeneous(50, seed=19))
+    fleet.solve()
+    epoch = fleet.stats("t0")["epoch"]
+    fleet.patch_activity("t0", np.empty(0, np.int64))
+    assert fleet.stats("t0")["epoch"] == epoch
+    assert fleet.solve() == 0                  # nothing dirty, no lanes run
+
+
+# --------------------------------------------------------------------- #
+# Deferred resolve + edge removal on PsiService
+# --------------------------------------------------------------------- #
+def test_service_deferred_patches_serve_stale_then_resolve():
+    g = erdos_renyi(60, 240, seed=20)
+    act = heterogeneous(60, seed=21)
+    svc = PsiService(g, act, tol=1e-9)
+    before = svc.scores().copy()
+    svc.update_activity(np.asarray([3]), lam=np.asarray([5.0]),
+                        resolve=False)
+    assert svc.stale
+    np.testing.assert_array_equal(svc.scores(), before)   # stale by design
+    svc.resolve()
+    assert not svc.stale
+    lam2 = act.lam.copy()
+    lam2[3] = 5.0
+    psi_true, _ = exact_psi(g, Activity(lam2, act.mu))
+    assert np.abs(svc.scores() - psi_true).max() <= 1e-6
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_service_remove_edges_reaches_filtered_fixed_point(backend):
+    g = erdos_renyi(50, 220, seed=22)
+    act = heterogeneous(50, seed=23)
+    svc = PsiService(g, act, tol=1e-9, backend=backend)
+    svc.scores()
+    rng = np.random.default_rng(24)
+    drop = rng.permutation(g.m)[:30]
+    svc.remove_edges(g.src[drop], g.dst[drop])
+    keep = np.setdiff1d(np.arange(g.m), drop)
+    psi_true, _ = exact_psi(Graph(g.n, g.src[keep], g.dst[keep]), act)
+    assert np.abs(svc.scores() - psi_true).max() <= 1e-6
+    assert svc.graph.m == g.m - drop.size
+
+
+# --------------------------------------------------------------------- #
+# Ingest → resolve parity vs from-scratch batch (acceptance criterion)
+# --------------------------------------------------------------------- #
+def test_ingest_service_parity_flash_crowd():
+    n, m = 200, 1_200
+    g = powerlaw_configuration(n, m, seed=25)
+    truth = heterogeneous(n, seed=26)
+    horizon = 1_500 / float(truth.total.sum())
+    log = flash_crowd_stream(g, truth, horizon, new_followers=24, churn=0.5,
+                             seed=27)
+    svc = PsiService(g, cold_activity(n), tol=1e-9)
+    ing = StreamIngestor(svc, half_life=horizon / 2,
+                         policy=FreshnessPolicy(coalesce=32,
+                                                resolve_every=400))
+    rep = ing.ingest(log)
+    assert rep.resolves >= 2 and rep.events_total == len(log)
+    assert rep.staleness_events == 0           # final resolve = fully fresh
+    # replay + resolve == from-scratch solve on the final state
+    psi_batch = batch_psi(svc.graph, svc.engine.activity)
+    assert np.abs(svc.scores() - psi_batch).max() <= 1e-6
+    # the graph actually churned: follows added, tombstones removed
+    assert svc.graph.m != g.m
+    # the estimator's synced mirror is exactly what the target serves
+    # (each user's rate is the estimate at its last drain time — re-querying
+    # the estimator *now* would re-decay, so compare the mirror, not rates())
+    est = ing.estimator()
+    assert est.dirty.size == 0 and est.pending_mass() == 0.0
+    served = svc.engine.activity
+    np.testing.assert_allclose(served.lam, est._synced[0], rtol=1e-12)
+    np.testing.assert_allclose(served.mu, est._synced[1], rtol=1e-12)
+
+
+def test_ingest_fleet_routes_tenant_events():
+    from repro.serving import TenantFleet
+    tenants = {}
+    for k, tid in enumerate(("alpha", "beta")):
+        g = erdos_renyi(64, 300, seed=30 + k)
+        tenants[tid] = (g, heterogeneous(64, seed=40 + k))
+    fleet = TenantFleet(backend="dense", tol=1e-8)
+    for tid, (g, act) in tenants.items():
+        fleet.admit(tid, g, cold_activity(g.n))
+    horizon = 60.0
+    log = tenant_interleave({
+        tid: flash_crowd_stream(g, act, horizon, new_followers=10,
+                                churn=0.4, seed=50 + i)
+        for i, (tid, (g, act)) in enumerate(tenants.items())})
+    ing = StreamIngestor(fleet, half_life=horizon / 2,
+                         policy=FreshnessPolicy(coalesce=32,
+                                                resolve_every=300))
+    ing.ingest(log)
+    for tid in tenants:
+        g_final = fleet._rec(tid).host.graph()
+        act_final = fleet.activity(tid)
+        psi_batch = batch_psi(g_final, act_final, tol=1e-8)
+        assert np.abs(fleet.psi(tid) - psi_batch).max() <= 1e-6
+    # per-tenant estimators are independent lanes
+    assert ing.estimator("alpha") is not ing.estimator("beta")
+    with pytest.raises(TypeError, match="TenantEvent"):
+        ing.submit(Post(99.0, 1))
+    with pytest.raises(KeyError):
+        ing.submit(TenantEvent("nope", Post(99.0, 1)))
+
+
+def test_ingest_async_driver_between_runs_parity():
+    from repro.asyncexec import AsyncPsiDriver
+    n, m = 150, 900
+    g = powerlaw_configuration(n, m, seed=33)
+    truth = heterogeneous(n, seed=34)
+    horizon = 800 / float(truth.total.sum())
+    log = flash_crowd_stream(g, truth, horizon, new_followers=16, churn=0.5,
+                             seed=35)
+    drv = AsyncPsiDriver(g, cold_activity(n), num_chunks=3, tau=1)
+    ing = StreamIngestor(drv, half_life=horizon / 2,
+                         policy=FreshnessPolicy(coalesce=32,
+                                                resolve_every=250),
+                         resolve_opts=dict(tol=1e-9))
+    rep = ing.ingest(log)
+    assert rep.resolves >= 2
+    psi_batch = batch_psi(drv.host.graph(), drv.host.activity())
+    assert np.abs(ing.psi() - psi_batch).max() <= 1e-6
+
+
+def test_ingest_rejects_unsupported_target():
+    with pytest.raises(TypeError, match="unsupported"):
+        StreamIngestor(object())
+
+
+# --------------------------------------------------------------------- #
+# Tombstone netting + freshness semantics
+# --------------------------------------------------------------------- #
+def test_unfollow_nets_against_pending_follow_in_window():
+    g = erdos_renyi(30, 120, seed=36)
+    act = heterogeneous(30, seed=37)
+    svc = PsiService(g, act, tol=1e-8)
+    svc.scores()
+    cache = svc._cache
+    ing = StreamIngestor(svc, policy=FreshnessPolicy(coalesce=100,
+                                                     resolve_every=None))
+    # a brand-new edge followed then unfollowed inside one window
+    existing = set(zip(g.src.tolist(), g.dst.tolist()))
+    s, d = next((a, b) for a in range(30) for b in range(30)
+                if a != b and (a, b) not in existing)
+    ing.submit(Follow(1.0, s, d))
+    ing.submit(Unfollow(2.0, s, d))
+    ing.flush()
+    assert svc.graph.m == g.m                  # netted out: nothing applied
+    assert svc._cache is cache                 # and nothing invalidated
+    # unfollow → follow of an existing edge nets to the plain (dup) insert
+    s0, d0 = int(g.src[0]), int(g.dst[0])
+    ing.submit(Unfollow(3.0, s0, d0))
+    ing.submit(Follow(4.0, s0, d0))
+    ing.flush()
+    assert svc.graph.m == g.m
+    # a plain tombstone of an existing edge removes it
+    ing.submit(Unfollow(5.0, s0, d0))
+    ing.flush()
+    assert svc.graph.m == g.m - 1
+
+
+def test_freshness_policy_and_certification():
+    g = erdos_renyi(40, 160, seed=38)
+    truth = heterogeneous(40, seed=39)
+    svc = PsiService(g, cold_activity(40), tol=1e-8)
+    ing = StreamIngestor(svc, half_life=50.0,
+                         policy=FreshnessPolicy(coalesce=10,
+                                                resolve_every=50))
+    log = poisson_stream(truth, 120 / float(truth.total.sum()), seed=40)
+    ing.ingest(log, resolve_at_end=False)
+    rep = ing.freshness()
+    assert isinstance(rep, FreshnessReport)
+    assert rep.events_total == len(log)
+    assert rep.resolves == len(log) // 50      # the event trigger fired
+    assert rep.events_unresolved < 50
+    assert rep.events_buffered == 0            # ingest() always flushes
+    # staleness bounds: lax passes, strict forces a resolve
+    assert rep.certify(max_events=50)
+    assert not rep.certify(max_events=0) or rep.events_unresolved == 0
+    before = ing.resolves
+    ing.top_k(5, max_events=0)                 # demand perfectly fresh
+    assert ing.resolves == before + (1 if rep.events_unresolved else 0)
+    assert ing.freshness().certify(max_events=0)
+    # churn was tracked between resolves
+    assert all(0.0 <= c <= 1.0 for c in ing.churn_history)
+
+
+def test_query_driven_first_resolve_updates_freshness_accounting():
+    """A query the target can only answer by solving (never resolved yet)
+    must route through the ingestor's resolve() so the freshness report
+    describes the ranking actually served."""
+    from repro.asyncexec import AsyncPsiDriver
+    g = erdos_renyi(40, 160, seed=42)
+    truth = heterogeneous(40, seed=43)
+    drv = AsyncPsiDriver(g, cold_activity(40), num_chunks=3, tau=1)
+    ing = StreamIngestor(drv, half_life=20.0,
+                         policy=FreshnessPolicy(coalesce=8,
+                                                resolve_every=None),
+                         resolve_opts=dict(tol=1e-9))
+    log = poisson_stream(truth, 60 / float(truth.total.sum()), seed=44)
+    ing.ingest(log, resolve_at_end=False)
+    assert ing.resolves == 0
+    ing.top_k(5)                               # no bounds — but never solved
+    assert ing.resolves == 1
+    rep = ing.freshness()
+    assert rep.events_unresolved == 0 and rep.certify(max_events=0)
+    before = ing.resolves
+    ing.top_k(5, max_events=0)                 # already fresh: no extra run
+    assert ing.resolves == before
+
+
+def test_dirty_mass_trigger_resolves():
+    g = erdos_renyi(20, 80, seed=41)
+    svc = PsiService(g, cold_activity(20), tol=1e-8)
+    ing = StreamIngestor(
+        svc, half_life=10.0,
+        policy=FreshnessPolicy(coalesce=4, resolve_every=None,
+                               max_dirty_mass=0.5))
+    # a hot user: rate estimates rocket past the floor → mass crosses 0.5
+    for k in range(40):
+        ing.submit(Post(0.1 * (k + 1), user=3))
+    assert ing.resolves >= 1
+    rep = ing.freshness()
+    assert rep.dirty_mass <= 0.5 or rep.events_unresolved == 0
