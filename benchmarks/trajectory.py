@@ -29,6 +29,15 @@ replaces it), so speedups and regressions are measured, not asserted:
   max top-k churn between resolves, and psi_err of the streamed fixed
   point vs a from-scratch batch solve on the final (graph,
   estimated-activity) state (acceptance: psi_err ≤ 1e-6).
+* ``local_query`` — the certified top-k benchmark (docs/LOCALPUSH.md):
+  drift-sized λ perturbations on 0.1 % / 1 % / 10 % dirty sets, each
+  warm-resolved to a certified top-100 by the ``push`` backend through
+  its maintained residual handle; records push edge-work as a fraction
+  of a global reference warm resolve (mat-vecs × M edges), touched-node
+  fraction, certified-vs-exact top-k agreement, and the certificate
+  against the true float64 ψ error (acceptance at 0.1 % dirty:
+  work_frac ≤ 5 %, agreement = 1.0, certificate ≥ true error on every
+  recorded run).
 
 Run via ``python -m benchmarks.run --only trajectory`` (add ``--quick`` for
 the CI smoke sizes).
@@ -294,6 +303,65 @@ def run(quick: bool = False, json_path: str = JSON_PATH) -> list[dict]:
          f"{srep.events_total} events;{srep.resolves} resolves"
          f";psi_err={psi_err:.1e};churn_max={churn_max:.2f}"
          " (psi_err<=1e-6 = acceptance)")
+
+    # ---- local-query trajectory: certified top-k push vs global sweep -- #
+    from repro.core import exact_psi
+
+    n_q, m_q = (1_200, 8_000) if quick else (2_500, 17_000)
+    k_q, drift, tol_q = 100, 1.02, 1e-9
+    g_q = powerlaw_configuration(n_q, m_q, seed=50)
+    act_q = heterogeneous(n_q, seed=51)
+    rng_q = np.random.default_rng(52)
+    for frac in (0.001, 0.01, 0.1):
+        eng_p = make_engine("push", graph=g_q, activity=act_q)
+        cold_q = eng_p.run(tol=tol_q)
+        dirty = rng_q.choice(n_q, size=max(1, int(frac * n_q)),
+                             replace=False)
+        new_lam = act_q.lam[dirty] * drift
+        eng_p.patch_activity(dirty, lam=new_lam)
+        t0 = time.perf_counter()
+        res_q, cert_q = eng_p.run_top_k(k_q, tol=tol_q, s0=cold_q.s)
+        wall_q = time.perf_counter() - t0
+        stats_q = eng_p.last_run_stats
+        push_edges = (stats_q["edge_work"]
+                      + stats_q["reseed_matvecs"] * g_q.m)
+        # the global alternative: a reference sweep warm-resolving the same
+        # patched state from its own converged iterate (mat-vecs × M edges)
+        eng_r = make_engine("reference", graph=g_q, activity=act_q,
+                            dtype=jnp.float64)
+        cold_r = eng_r.run(tol=tol_q)
+        eng_r.patch_activity(dirty, lam=new_lam)
+        res_r = eng_r.run(tol=tol_q, s0=cold_r.s)
+        ref_edges = int(res_r.matvecs) * g_q.m
+        lam2 = act_q.lam.copy()
+        lam2[dirty] = new_lam
+        psi_t, _ = exact_psi(g_q, Activity(lam2, act_q.mu))
+        exact_top = set(np.argsort(-psi_t,
+                                   kind="stable")[:k_q].tolist())
+        agreement = len(set(cert_q.indices.tolist()) & exact_top) / k_q
+        # the certificate covers the float64 host ψ
+        true_err = float(np.abs(eng_p.last_psi_host - psi_t).max())
+        bound_q = eng_p.psi_error_bound()
+        work_frac = push_edges / max(1, ref_edges)
+        entries.append(dict(
+            graph="local_query", backend="push",
+            regime=f"dirty={frac:g}", n=n_q, m=g_q.m, dtype="float64",
+            tol=tol_q, wall_s=wall_q, iterations=int(res_q.iterations),
+            matvecs=int(res_q.matvecs), converged=bool(res_q.converged),
+            gap=float(res_q.gap), k=k_q, dirty_frac=frac, drift=drift,
+            push_edges=int(push_edges), ref_edges=ref_edges,
+            work_frac=work_frac, topk_agreement=agreement,
+            certified=bool(cert_q.certified), cert_bound=bound_q,
+            true_err=true_err, touched_frac=stats_q["touched_frac"],
+            cert_edge_work=int(stats_q["cert_edge_work"])))
+        emit(f"trajectory/local_query/dirty={frac:g}",
+             work_frac * 100.0,
+             f"push edge-work as % of global warm resolve;k={k_q}"
+             f";agreement={agreement:.2f};certified={cert_q.certified}"
+             f";touched={stats_q['touched_frac']:.1%}"
+             f";cert={'none' if bound_q is None else f'{bound_q:.1e}'}"
+             f">=err={true_err:.1e}"
+             " (0.1% dirty: <=5% = acceptance)")
 
     _append_run(entries, json_path, quick)
     return entries

@@ -37,6 +37,12 @@ Backends are registered by name and constructed through
     to ``tau`` epochs, termination gated by the stale-corrected Eq. 19
     certificate and sealed by a synchronous verification sweep
     (docs/ASYNC.md).
+  * ``push``        — the Gauss-Southwell residual-push solver of
+    :mod:`repro.localpush`: work proportional to where residual lives
+    (O(Δ·deg) after localized patches, certified top-k early stop via
+    ``run_top_k``), with the running bound
+    ``‖ψ_exact − ψ̂‖₁ ≤ ‖B‖·‖r‖₁/((1−α)·N)`` as the termination rule
+    (docs/LOCALPUSH.md).
 
 All backends share one :class:`ConvergenceCriterion` — ε on ‖B‖·‖Δs‖ per
 Eq. 19 — and report interchangeable :class:`~repro.core.power_psi.PsiResult`
@@ -193,6 +199,16 @@ class PsiEngine(abc.ABC):
         cannot shrink incrementally keep the default."""
         return False
 
+    # -- certified serving (see docs/LOCALPUSH.md) ---------------------- #
+    def psi_error_bound(self) -> float | None:
+        """Certified per-node ``|ψ_exact − ψ_served|`` bound for the last
+        ``run``'s returned ψ, or None when the backend cannot certify one
+        (the Eq. 19 gap bounds one step's *movement*, not the distance to
+        the fixed point). The ``push`` backend overrides this with its
+        residual certificate; :class:`~repro.core.incremental.RankingCache`
+        and the stream freshness report consume it."""
+        return None
+
     # -- shared helpers ------------------------------------------------- #
     @property
     def activity(self) -> Activity:
@@ -265,7 +281,19 @@ def register_backend(name: str):
     return deco
 
 
+def _ensure_plugin_backends() -> None:
+    """Import out-of-package backends that self-register on import.
+
+    ``repro.localpush`` imports this module, so a bottom-of-file import
+    here would deadlock whenever ``repro.localpush`` is the entry point
+    (its partially-initialized module would be re-entered before
+    ``PushEngine`` exists). Deferring to first registry *use* keeps both
+    import orders cycle-free."""
+    from .. import localpush  # noqa: F401  (registers backend="push")
+
+
 def available_backends() -> tuple[str, ...]:
+    _ensure_plugin_backends()
     return tuple(sorted(_REGISTRY))
 
 
@@ -287,6 +315,7 @@ def _accepted_options(cls: type[PsiEngine]) -> set[str]:
 def make_engine(backend: str = "reference", *, graph: Graph | None = None,
                 activity: Activity | None = None, **opts) -> PsiEngine:
     """Factory: construct (and, when given a graph, prepare) a backend."""
+    _ensure_plugin_backends()
     try:
         cls = _REGISTRY[backend]
     except KeyError:

@@ -43,7 +43,8 @@ from .formats import build_bsr, build_edge_tiles
 
 __all__ = ["RegimePlan", "PlanCache", "PLAN_CACHE", "graph_fingerprint",
            "bucket_fingerprint", "estimate_edge_tile_cost",
-           "estimate_bsr_cost", "plan_regime", "plan_for_bucket"]
+           "estimate_bsr_cost", "bsr_occupancy", "plan_regime",
+           "plan_for_bucket", "SolverChoice", "choose_solver"]
 
 
 # Default candidate spaces. Lane dims stay multiples of 128 (TPU tiling);
@@ -63,6 +64,13 @@ BSR_CANDIDATES: tuple[tuple[int, int], ...] = (
 _EDGE_SLOT_BYTES = 12.0       # 2 × i32 index + 1 × f32 gather per edge slot
 _BSR_SLOT_BYTES = 4.0         # f32 tile value per slot
 _NODE_STREAM_BYTES = 16.0     # mu, c, s_old, s_new per output element
+
+# BSR candidates whose tiles would be emptier than this are pruned *before*
+# scoring or microbenching: on a hyper-sparse graph a 128×128 tile holding a
+# handful of edges makes the format build + compile + timed step orders of
+# magnitude slower than the edge-tile path, and the model already knows the
+# regime cannot win — paying the microbench for it is pure waste.
+BSR_MIN_OCCUPANCY = 0.02
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,8 +108,8 @@ def estimate_edge_tile_cost(graph: Graph, *, tile: int, e1: int,
         num_tiles * tile * _NODE_STREAM_BYTES
 
 
-def estimate_bsr_cost(graph: Graph, *, ts: int, td: int) -> float:
-    """Modeled HBM bytes per step under the BSR regime."""
+def _bsr_blocks(graph: Graph, ts: int, td: int) -> int:
+    """Materialized BSR block count (nonempty + explicit zero dst covers)."""
     nst = max(1, -(-graph.n // ts))
     ndt = max(1, -(-graph.n // td))
     src, dst = graph.edges_by_dst
@@ -109,8 +117,23 @@ def estimate_bsr_cost(graph: Graph, *, ts: int, td: int) -> float:
     nonempty = np.unique(key).size if key.size else 0
     # uncovered dst tiles get an explicit zero block (see build_bsr)
     covered = np.unique(dst // td).size if dst.size else 0
-    num_blocks = max(1, nonempty + (ndt - covered))
-    return float(num_blocks) * ts * td * _BSR_SLOT_BYTES + \
+    return max(1, nonempty + (ndt - covered))
+
+
+def bsr_occupancy(graph: Graph, *, ts: int, td: int) -> float:
+    """Edges per materialized block slot — ``m / (num_blocks·ts·td)``.
+
+    The fraction of streamed tile values that are real edges; the rest is
+    zero-fill the MXU multiplies for nothing. Matches
+    ``build_bsr(graph).occupancy`` without materializing the format.
+    """
+    return graph.m / (_bsr_blocks(graph, ts, td) * ts * td)
+
+
+def estimate_bsr_cost(graph: Graph, *, ts: int, td: int) -> float:
+    """Modeled HBM bytes per step under the BSR regime."""
+    ndt = max(1, -(-graph.n // td))
+    return float(_bsr_blocks(graph, ts, td)) * ts * td * _BSR_SLOT_BYTES + \
         ndt * td * _NODE_STREAM_BYTES
 
 
@@ -223,6 +246,14 @@ def plan_regime(graph: Graph, *, microbench: bool = False,
         if hit is not None:
             return hit
 
+    # Density gate: drop BSR parameterizations whose tiles would stream
+    # mostly zero-fill. Deterministic (structure-only), so it is safe under
+    # the cache key above — the same graph always prunes the same set.
+    dense_bsr = [
+        (ts, td) for ts, td in bsr_candidates
+        if bsr_occupancy(graph, ts=ts, td=td) >= BSR_MIN_OCCUPANCY
+    ]
+
     candidates = [
         RegimePlan(regime="edge_tile", tile=t, e1=a, e2=b,
                    est_bytes=estimate_edge_tile_cost(graph, tile=t, e1=a,
@@ -231,7 +262,7 @@ def plan_regime(graph: Graph, *, microbench: bool = False,
     ] + [
         RegimePlan(regime="bsr", ts=ts, td=td,
                    est_bytes=estimate_bsr_cost(graph, ts=ts, td=td))
-        for ts, td in bsr_candidates
+        for ts, td in dense_bsr
     ]
 
     if microbench:
@@ -289,3 +320,62 @@ def plan_for_bucket(graph: Graph, *, n_pad: int, e_pad: int,
     if cache is not None:
         cache.store(key, plan)
     return plan
+
+
+# --------------------------------------------------------------------- #
+# Solver-level choice: local residual push vs global sweep
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SolverChoice:
+    """Which *solver* (not kernel format) a query should pay for.
+
+    A global Power-ψ sweep moves every edge every iteration — O(sweeps·m)
+    regardless of how little actually changed. The push backend
+    (``repro.localpush``) only moves the frontier's out-edges, which wins
+    when the dirty set is small and the query only needs a certified
+    top-k, and loses once the frontier saturates the graph.
+    """
+
+    solver: str               # "push" | "global"
+    push_edges: float         # modeled push edge-work for the query
+    global_edges: float       # modeled global edge-work (sweeps · m)
+    dirty_frac: float
+    k_frac: float
+
+
+def choose_solver(graph: Graph, *, dirty_frac: float, k_frac: float = 1.0,
+                  sweeps: int = 50) -> SolverChoice:
+    """Model whether local push beats a global sweep for this query.
+
+    Frontier-growth model: a warm push starts from ``dirty_frac·n`` seed
+    nodes and each round the frontier grows by the mean out-degree
+    ``m/n`` (residual mass fans out along out-edges), saturating at ``n``.
+    Rounds-to-target scales with how much of the vector the query needs:
+    a certified top-k with ``k ≪ n`` stops as soon as the k-th margin
+    clears the certificate, modeled as ``sweeps·(0.25 + 0.75·k_frac)``
+    rounds. Each frontier node costs its mean out-degree in edge work.
+
+    The model is deliberately coarse — it only has to rank two solvers
+    whose costs differ by orders of magnitude in the regimes that matter
+    (0.1% dirty vs 100% dirty), not predict wall time.
+    """
+    if not 0.0 <= dirty_frac <= 1.0:
+        raise ValueError(f"dirty_frac must be in [0, 1]; got {dirty_frac}")
+    if not 0.0 < k_frac <= 1.0:
+        raise ValueError(f"k_frac must be in (0, 1]; got {k_frac}")
+    if sweeps < 1:
+        raise ValueError(f"sweeps must be >= 1; got {sweeps}")
+    n = max(1, graph.n)
+    deg = graph.m / n                       # mean out-degree = fan-out rate
+    rounds = max(1, int(sweeps * (0.25 + 0.75 * k_frac)))
+    frontier = max(1.0, dirty_frac * n)
+    push_edges = 0.0
+    for _ in range(rounds):
+        push_edges += frontier * deg
+        frontier = min(float(n), frontier * max(1.0, deg))
+    global_edges = float(sweeps) * graph.m
+    solver = "push" if push_edges < global_edges else "global"
+    return SolverChoice(solver=solver, push_edges=push_edges,
+                        global_edges=global_edges,
+                        dirty_frac=float(dirty_frac),
+                        k_frac=float(k_frac))

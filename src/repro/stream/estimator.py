@@ -127,8 +127,7 @@ class RateEstimator:
               ) -> tuple[np.ndarray, np.ndarray]:
         """Current (λ̂, μ̂) vectors (floored), decayed to ``t`` (default:
         the latest event time seen)."""
-        est = self._rates_at(self.t if t is None else float(t),
-                             np.arange(self.n))
+        est = self._rates_at(self._at(t), np.arange(self.n))
         return est[0], est[1]
 
     def activity(self, t: float | None = None) -> Activity:
@@ -137,17 +136,34 @@ class RateEstimator:
         return Activity(lam, mu)
 
     # -- dirty-set / sync ------------------------------------------------ #
+    def _at(self, t: float | None) -> float:
+        """The shared clock read: ``t=None`` means "now" = the latest event
+        time seen. :meth:`pending_mass` and :meth:`drain` both resolve
+        their default through this one helper, so a pending-mass probe
+        followed by a drain at the same (default) instant measures the
+        *same* rates — the mass reported equals the mass drained."""
+        return self.t if t is None else float(t)
+
     @property
     def dirty(self) -> np.ndarray:
         """Users with events since the last :meth:`drain` (ascending)."""
         return np.nonzero(self._touched)[0]
 
     def pending_mass(self, t: float | None = None) -> float:
-        """Σ_dirty |λ̂−λ_synced| + |μ̂−μ_synced| — freshness-policy fuel."""
+        """l1 rate mass of the dirty set at time ``t`` (default "now", the
+        same clock read :meth:`drain` uses — see :meth:`_at`):
+
+            Σ_dirty |λ̂(t) − λ_synced| + |μ̂(t) − μ_synced|
+
+        Unit: events per event-time unit (a rate, same unit as λ/μ) summed
+        over users and both rate kinds — the l1 distance between the
+        estimated and the serving-side rate vectors. This is the freshness
+        policy's ``max_dirty_mass`` fuel and the scale of the residual the
+        push backend reseeds from a drained patch (docs/LOCALPUSH.md)."""
         users = self.dirty
         if users.size == 0:
             return 0.0
-        est = self._rates_at(self.t if t is None else float(t), users)
+        est = self._rates_at(self._at(t), users)
         return float(np.abs(est - self._synced[:, users]).sum())
 
     def drain(self, t: float | None = None
@@ -164,7 +180,7 @@ class RateEstimator:
         users = self.dirty
         if users.size == 0:
             return users, np.empty(0), np.empty(0), 0.0
-        est = self._rates_at(self.t if t is None else float(t), users)
+        est = self._rates_at(self._at(t), users)
         mass = float(np.abs(est - self._synced[:, users]).sum())
         self._synced[:, users] = est
         self._touched[users] = False

@@ -39,6 +39,11 @@ class FreshnessReport:
     dirty_mass: float        # l1(estimated − synced rates) over dirty users
     resolves: int            # resolves performed so far
     topk_churn: float | None = None   # 1 − overlap/k between last 2 resolves
+    # certified per-node |ψ_exact − ψ_served| bound of the serving solve
+    # (engine residual certificate, see docs/LOCALPUSH.md); None when the
+    # backend cannot certify one or events arrived since it was issued —
+    # a bound must never outlive the operators it was proved against
+    psi_error_bound: float | None = None
 
     @property
     def staleness_events(self) -> int:
@@ -50,14 +55,24 @@ class FreshnessReport:
 
     def certify(self, *, max_events: int | None = None,
                 max_seconds: float | None = None,
-                max_dirty_mass: float | None = None) -> bool:
+                max_dirty_mass: float | None = None,
+                max_psi_error: float | None = None) -> bool:
         """True iff the served ranking meets every given staleness bound
-        (an unset bound is not demanded; no bounds → trivially fresh)."""
+        (an unset bound is not demanded; no bounds → trivially fresh).
+
+        ``max_psi_error`` demands a *certified* numerical bound: it fails
+        whenever ``psi_error_bound`` is absent, not merely when it is
+        large — an uncertified ranking cannot satisfy a certificate
+        demand."""
         if max_events is not None and self.staleness_events > max_events:
             return False
         if max_seconds is not None and self.staleness_seconds > max_seconds:
             return False
         if max_dirty_mass is not None and self.dirty_mass > max_dirty_mass:
+            return False
+        if max_psi_error is not None and (
+                self.psi_error_bound is None
+                or self.psi_error_bound > max_psi_error):
             return False
         return True
 

@@ -95,6 +95,15 @@ class _ServiceTarget:
     def psi_of(self, key) -> np.ndarray:
         return self.svc.scores()
 
+    def psi_error_bound(self):
+        """The engine's certificate for the *served* fixed point — only
+        meaningful while no patch has been applied since it was issued
+        (certifying engines self-invalidate on patches, and the ingestor
+        additionally gates on zero unresolved events)."""
+        if self.svc.last_result is None:
+            return None
+        return self.svc.engine.psi_error_bound()
+
 
 class _FleetTarget:
     """Per-tenant-lane adapter over a TenantFleet (native deferral)."""
@@ -138,6 +147,9 @@ class _FleetTarget:
 
     def psi_of(self, tid) -> np.ndarray:
         return self.fleet.psi(tid)
+
+    def psi_error_bound(self):
+        return None          # vmapped lanes carry no residual certificate
 
 
 class _AsyncDriverTarget:
@@ -184,6 +196,9 @@ class _AsyncDriverTarget:
 
     def psi_of(self, key) -> np.ndarray:
         return self._cache.psi
+
+    def psi_error_bound(self):
+        return None          # the async gap certifies movement, not distance
 
 
 def _adapt(target, resolve_opts: dict):
@@ -425,27 +440,36 @@ class StreamIngestor:
             mass += lane.est.pending_mass(self._event_t)
             dirty.update((key, u) for u in lane.unresolved_users)
             dirty.update((key, int(u)) for u in lane.est.dirty)
+        unresolved = self.events_total - self._resolved_events
+        # a numerical certificate only covers the served ψ while nothing
+        # has been ingested on top of the operators it was proved against
+        bound = (self._adapter.psi_error_bound()
+                 if unresolved == 0 else None)
         return FreshnessReport(
             event_time=self._event_t, resolve_time=self._resolve_t,
             events_total=self.events_total, events_buffered=self._buffered,
-            events_unresolved=self.events_total - self._resolved_events,
+            events_unresolved=unresolved,
             dirty_users=len(dirty), dirty_mass=mass, resolves=self.resolves,
-            topk_churn=self._last_churn)
+            topk_churn=self._last_churn, psi_error_bound=bound)
 
     def top_k(self, k: int, *, max_events: int | None = None,
               max_seconds: float | None = None,
-              max_dirty_mass: float | None = None):
+              max_dirty_mass: float | None = None,
+              max_psi_error: float | None = None):
         """Query the served ranking, demanding at most the given staleness:
         if the current :class:`FreshnessReport` fails ``certify``, the
         ingestor resolves first (otherwise the stale ranking serves). A
         query the target could only answer by solving anyway (never solved,
         or a fleet with stale lanes — frontier reads are fresh-on-read)
         also routes through :meth:`resolve`, so the freshness counters
-        always describe the ranking actually served."""
+        always describe the ranking actually served. ``max_psi_error``
+        additionally demands a certified numerical bound on the served ψ
+        (only certifying backends — ``push`` — can serve stale under it)."""
         if (self._adapter.needs_resolve()
                 or not self.freshness().certify(
                     max_events=max_events, max_seconds=max_seconds,
-                    max_dirty_mass=max_dirty_mass)):
+                    max_dirty_mass=max_dirty_mass,
+                    max_psi_error=max_psi_error)):
             self.resolve()
         return self._adapter.top_k(k)
 

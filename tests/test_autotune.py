@@ -4,7 +4,8 @@ import pytest
 
 from repro.graphs import clustered_blocks, erdos_renyi, powerlaw_configuration
 from repro.kernels import autotune
-from repro.kernels.autotune import (PlanCache, RegimePlan, plan_regime,
+from repro.kernels.autotune import (BSR_MIN_OCCUPANCY, PlanCache, RegimePlan,
+                                    bsr_occupancy, choose_solver, plan_regime,
                                     estimate_bsr_cost,
                                     estimate_edge_tile_cost)
 from repro.kernels.formats import build_bsr, build_edge_tiles
@@ -99,3 +100,61 @@ def test_global_cache_is_default(sparse_graph):
     plan_regime(sparse_graph)
     assert autotune.PLAN_CACHE.hits == 1
     autotune.PLAN_CACHE.clear()
+
+
+# --------------------------------------------------------------------- #
+# BSR density pruning + solver-level choice (push vs global)
+# --------------------------------------------------------------------- #
+def test_bsr_occupancy_matches_format(sparse_graph, clustered_graph):
+    """The O(M) estimate must agree with the materialized format's ratio."""
+    for g in (sparse_graph, clustered_graph):
+        est = bsr_occupancy(g, ts=128, td=128)
+        assert est == pytest.approx(build_bsr(g).occupancy, rel=1e-12)
+    assert bsr_occupancy(sparse_graph, ts=128, td=128) < BSR_MIN_OCCUPANCY
+    assert bsr_occupancy(clustered_graph, ts=128, td=128) > BSR_MIN_OCCUPANCY
+
+
+def test_microbench_prunes_hypersparse_bsr(sparse_graph, clustered_graph,
+                                           monkeypatch):
+    """The regression the planner latency depends on: on a hyper-sparse
+    graph no BSR candidate may reach the microbench (building + timing a
+    near-empty 128×128 tile format costs orders of magnitude more than the
+    step it measures), while a clustered graph still times and picks BSR."""
+    timed = []
+
+    def fake_bench(graph, plan, dtype, interpret):
+        timed.append(plan.regime)
+        return 1.0 if plan.regime == "bsr" else 2.0   # bsr "wins" if timed
+    monkeypatch.setattr(autotune, "_microbench_step", fake_bench)
+
+    timed.clear()
+    plan = plan_regime(sparse_graph, microbench=True, cache=None)
+    assert "bsr" not in timed
+    assert plan.regime == "edge_tile"
+
+    timed.clear()
+    plan = plan_regime(clustered_graph, microbench=True, cache=None)
+    assert "bsr" in timed
+    assert plan.regime == "bsr"
+
+
+def test_choose_solver_local_query_picks_push(sparse_graph):
+    c = choose_solver(sparse_graph, dirty_frac=0.001, k_frac=0.01)
+    assert c.solver == "push"
+    assert c.push_edges < c.global_edges
+
+
+def test_choose_solver_global_query_picks_sweep(sparse_graph):
+    c = choose_solver(sparse_graph, dirty_frac=1.0, k_frac=1.0)
+    assert c.solver == "global"
+    assert c.push_edges >= c.global_edges
+
+
+def test_choose_solver_validates():
+    g = erdos_renyi(50, 100, seed=0)
+    with pytest.raises(ValueError, match="dirty_frac"):
+        choose_solver(g, dirty_frac=1.5)
+    with pytest.raises(ValueError, match="k_frac"):
+        choose_solver(g, dirty_frac=0.1, k_frac=0.0)
+    with pytest.raises(ValueError, match="sweeps"):
+        choose_solver(g, dirty_frac=0.1, sweeps=0)

@@ -1,0 +1,340 @@
+"""Local residual-push solver: push invariant, residual certificates,
+certified top-k early stop, O(Δ) warm reseeds, jit frontier parity, and
+the certified serving/freshness integration."""
+import numpy as np
+import pytest
+
+from repro.core import (Activity, HostOperators, PsiService, exact_psi,
+                        heterogeneous, make_engine)
+from repro.graphs import powerlaw_configuration
+from repro.graphs.structure import Graph
+from repro.localpush import (a_norm, cert_scale, certify_top_k, cold_state,
+                             psi_value, push_scalar, push_until, reseed_state)
+from repro.localpush import push as push_mod
+from repro.localpush import warm
+from repro.stream import FreshnessReport, Post, RateEstimator, Repost
+
+
+@pytest.fixture(scope="module")
+def platform():
+    g = powerlaw_configuration(400, 2600, seed=5)
+    act = heterogeneous(g.n, seed=6)
+    psi_true, s_true = exact_psi(g, act)
+    return g, act, psi_true, s_true
+
+
+def _host(g, act):
+    return HostOperators.from_graph(g, act)
+
+
+def _check_invariant(host, state):
+    """r and p must satisfy r = c + μ⊙p − x with p derived from x."""
+    fresh = reseed_state(host, state.x)
+    np.testing.assert_allclose(state.p, fresh.p, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(state.r, fresh.r, rtol=1e-9, atol=1e-12)
+
+
+# --------------------------------------------------------------------- #
+# Core push: scalar oracle, vectorized rounds, certificates
+# --------------------------------------------------------------------- #
+def test_scalar_oracle_and_vectorized_rounds_agree(platform):
+    g, act, psi_true, _ = platform
+    host = _host(g, act)
+    tol_r = 1e-11
+    st_scalar, pushes, _ = push_scalar(host, tol_r=tol_r)
+    assert pushes > 0
+    st_round = cold_state(host)
+    push_until(host, st_round, tol_r=tol_r)
+    bound = cert_scale(host) * tol_r
+    for st in (st_scalar, st_round):
+        _check_invariant(host, st)
+        assert np.abs(psi_value(host, st) - psi_true).max() <= bound
+
+
+def test_each_push_contracts_the_residual(platform):
+    g, act, _, _ = platform
+    host = _host(g, act)
+    alpha = a_norm(host)
+    assert 0.0 < alpha < 1.0
+    st = cold_state(host)
+    for _ in range(50):
+        before = push_mod.l1(st.r)
+        nodes, _ = push_mod.push_round(host, st)
+        if nodes.size == 0:
+            break
+        assert push_mod.l1(st.r) < before + 1e-15
+
+
+def test_certificate_bounds_true_error_every_run(platform):
+    """The acceptance invariant: on every recorded run the certificate is
+    ≥ the true |ψ_exact − ψ̂|∞ of the float64 host ψ it covers."""
+    g, act, psi_true, _ = platform
+    eng = make_engine("push", graph=g, activity=act)
+    for tol in (1e-4, 1e-7, 1e-10):
+        res = eng.run(tol=tol)
+        cert = eng.psi_error_bound()
+        assert cert is not None and np.isfinite(cert)
+        true_err = np.abs(eng.last_psi_host - psi_true).max()
+        assert true_err <= cert
+
+
+def test_certified_top_k_matches_exact(platform):
+    g, act, psi_true, _ = platform
+    eng = make_engine("push", graph=g, activity=act)
+    res, cert = eng.run_top_k(10, tol=1e-10)
+    assert cert is not None and cert.certified
+    exact_top = set(np.argsort(-psi_true, kind="stable")[:10].tolist())
+    assert set(cert.indices.tolist()) == exact_top
+    # early certified stop does real work savings vs the full solve
+    assert int(res.iterations) <= int(eng.run(tol=1e-10).iterations)
+
+
+def test_certify_top_k_edge_cases():
+    psi = np.asarray([0.5, 0.4, 0.39, 0.1])
+    wide = certify_top_k(psi, 1, err_bound=0.04)   # margin 0.1 > 2·0.04
+    assert wide.certified
+    tight = certify_top_k(psi, 2, err_bound=0.01)  # margin 0.01 < 2·0.01
+    assert not tight.certified
+    nobound = certify_top_k(psi, 2, err_bound=None)
+    assert not nobound.certified                   # honest: no certificate
+    assert nobound.indices.tolist() == [0, 1]      # indices still served
+    whole = certify_top_k(psi, 4, err_bound=0.5)
+    assert whole.certified and np.isinf(whole.margin)
+
+
+# --------------------------------------------------------------------- #
+# O(Δ) warm reseeds: the invariant survives interleaved patches
+# --------------------------------------------------------------------- #
+def test_invariant_and_parity_after_interleaved_patches(platform):
+    g, act, _, _ = platform
+    host = _host(g, act)
+    st = cold_state(host)
+    push_until(host, st, tol_r=1e-9)
+
+    # activity patch
+    users = np.asarray([3, 17, 99])
+    lam = np.asarray([2.0, 0.7, 1.3])
+    warm.apply_activity_patch(host, st, users, lam=lam, mu=None)
+    _check_invariant(host, st)
+    # edge insert (incl. one duplicate of an existing edge — filtered)
+    add_s = np.asarray([0, 5, int(g.src[0])], np.int32)
+    add_d = np.asarray([30, 31, int(g.dst[0])], np.int32)
+    warm.apply_edge_insert(host, st, add_s, add_d)
+    _check_invariant(host, st)
+    # edge remove (incl. one absent tombstone — ignored)
+    rm_s = np.asarray([0, 7], np.int32)
+    rm_d = np.asarray([30, (int(g.dst[7]) + 1) % g.n], np.int32)
+    warm.apply_edge_remove(host, st, rm_s, rm_d)
+    _check_invariant(host, st)
+
+    # re-push and compare against a from-scratch exact solve
+    push_until(host, st, tol_r=1e-12)
+    lam2 = act.lam.copy()
+    lam2[users] = lam
+    g1 = Graph(g.n, np.concatenate([g.src, add_s]),
+               np.concatenate([g.dst, add_d])).dedup()
+    keep = ~np.isin(g1.src.astype(np.int64) * g1.n + g1.dst,
+                    rm_s.astype(np.int64) * g1.n + rm_d)
+    g2 = Graph(g.n, g1.src[keep], g1.dst[keep])
+    psi_true, _ = exact_psi(g2, Activity(lam2, act.mu))
+    assert np.abs(psi_value(host, st) - psi_true).max() <= 1e-9
+
+
+def test_patch_reseed_residual_is_local(platform):
+    """An activity patch creates residual only on the affected subgraph."""
+    g, act, _, _ = platform
+    host = _host(g, act)
+    st = cold_state(host)
+    push_until(host, st, tol_r=1e-13)
+    base_r = np.abs(st.r).max()
+    # a lightly-followed user: the affected set is them plus the leaders of
+    # their few followers — a small neighborhood, not the graph
+    indeg = np.bincount(g.dst, minlength=g.n)
+    u = int(np.flatnonzero(indeg == max(1, indeg[indeg > 0].min()))[0])
+    warm.apply_activity_patch(host, st, np.asarray([u]),
+                              lam=np.asarray([act.lam[u] * 2.0]), mu=None)
+    hot = np.abs(st.r) > 100 * max(base_r, 1e-300)
+    assert 0 < hot.sum() < 0.2 * g.n
+
+
+def test_engine_warm_patch_locality_and_savings():
+    """The headline: a 0.1% dirty warm certified-top-k resolve touches a
+    small fraction of the graph and beats the cold solve's work."""
+    g = powerlaw_configuration(2000, 9000, seed=7)
+    act = heterogeneous(g.n, seed=8)
+    eng = make_engine("push", graph=g, activity=act)
+    cold = eng.run(tol=1e-10)
+    cold_work = eng.last_run_stats["edge_work"]
+    rng = np.random.default_rng(0)
+    users = rng.choice(g.n, size=max(1, g.n // 1000), replace=False)
+    eng.patch_activity(users, lam=act.lam[users] * 1.5)
+    assert eng.psi_error_bound() is None     # patch invalidated the cert
+    # certified top-k warm resolve: stops at rank separation, so the push
+    # stays in the dirty neighborhood instead of diffusing graph-wide
+    res, cert = eng.run_top_k(20, tol=1e-10, s0=cold.s)
+    stats = eng.last_run_stats
+    assert stats["reseed_matvecs"] == 0      # identity handle: no reseed
+    assert cert.certified
+    assert stats["touched_frac"] < 0.5
+    assert stats["edge_work"] < cold_work
+    lam2 = act.lam.copy()
+    lam2[users] = act.lam[users] * 1.5
+    psi_true, _ = exact_psi(g, Activity(lam2, act.mu))
+    assert set(cert.indices.tolist()) == \
+        set(np.argsort(-psi_true, kind="stable")[:20].tolist())
+    # driving on to the full tolerance from the same handle stays exact
+    eng.run(tol=1e-10, s0=res.s)
+    assert np.abs(eng.last_psi_host - psi_true).max() <= eng.psi_error_bound()
+
+
+# --------------------------------------------------------------------- #
+# jit frontier mode
+# --------------------------------------------------------------------- #
+def test_jit_frontier_parity(platform):
+    g, act, psi_true, _ = platform
+    eng = make_engine("push", graph=g, activity=act, frontier="jit",
+                      frontier_size=64)
+    res = eng.run(tol=1e-6)
+    assert bool(res.converged)
+    # the certificate covers the float64 host ψ (verified after the
+    # compiled phase), never raw device state
+    assert np.abs(eng.last_psi_host - psi_true).max() <= eng.psi_error_bound()
+    assert np.abs(np.asarray(res.psi) - psi_true).max() <= 1e-5
+
+
+def test_jit_frontier_invalidated_by_edge_patch(platform):
+    g, act, _, _ = platform
+    eng = make_engine("push", graph=g, activity=act, frontier="jit")
+    eng.run(tol=1e-6)
+    assert eng._fops is not None
+    eng.patch_edges(np.asarray([0]), np.asarray([13]))
+    assert eng._fops is None                 # padded leader table regrows
+    g2 = Graph(g.n, np.concatenate([g.src, [0]]),
+               np.concatenate([g.dst, [13]])).dedup()
+    psi_true, _ = exact_psi(g2, act)
+    eng.run(tol=1e-8)
+    assert np.abs(eng.last_psi_host - psi_true).max() <= 1e-6
+
+
+# --------------------------------------------------------------------- #
+# Engine construction contracts
+# --------------------------------------------------------------------- #
+def test_push_engine_validates_options():
+    with pytest.raises(ValueError, match="l1"):
+        from repro.core import ConvergenceCriterion
+        make_engine("push", criterion=ConvergenceCriterion(norm="linf"))
+    with pytest.raises(ValueError, match="accelerate"):
+        make_engine("push", accelerate=True)
+    with pytest.raises(ValueError, match="frontier"):
+        make_engine("push", frontier="heap")
+    with pytest.raises(ValueError, match="bucket_ratio"):
+        make_engine("push", bucket_ratio=0.0)
+
+
+def test_push_engine_rejects_lambda_free_feed():
+    """α ≥ 1 (a feed with zero λ mass) has no finite certificate."""
+    g = Graph(3, np.asarray([0, 1]), np.asarray([2, 2]))
+    # the followed leader never posts (λ=0, μ>0): its followers' feeds
+    # carry zero λ mass, so ‖M‖₁ = 1 and the certificate is vacuous
+    act = Activity(np.asarray([1.0, 1.0, 0.0]), np.asarray([1.0, 1.0, 1.0]))
+    with pytest.raises(ValueError, match="α"):
+        make_engine("push", graph=g, activity=act)
+
+
+# --------------------------------------------------------------------- #
+# Serving integration: PsiService.top_k_certified
+# --------------------------------------------------------------------- #
+def test_service_top_k_certified_early_stop_then_resolve(platform):
+    g, act, psi_true, _ = platform
+    svc = PsiService(g, act, tol=1e-10, backend="push")
+    svc.scores()
+    u = int(np.argsort(-psi_true)[5])
+    svc.update_activity(np.asarray([u]), lam=np.asarray([act.lam[u] * 1.2]),
+                        resolve=False)
+    cert = svc.top_k_certified(10)
+    assert cert.certified
+    lam2 = act.lam.copy()
+    lam2[u] = act.lam[u] * 1.2
+    psi2, _ = exact_psi(g, Activity(lam2, act.mu))
+    assert set(cert.indices.tolist()) == \
+        set(np.argsort(-psi2, kind="stable")[:10].tolist())
+    # the early stop left scores only err_bound-accurate; resolve restores
+    # the full contract and subsequent reads serve the tight fixed point
+    svc.resolve()
+    assert np.abs(svc.scores() - psi2).max() <= 1e-6
+
+
+def test_service_noncertifying_backend_is_honest(platform):
+    g, act, _, _ = platform
+    svc = PsiService(g, act, tol=1e-9, backend="reference")
+    cert = svc.top_k_certified(5)
+    assert not cert.certified                # no residual bound to certify
+    assert cert.err_bound is None
+    assert cert.indices.shape == (5,)        # indices still served
+
+
+def test_ranking_cache_bound_inflated_for_cast_psi(platform):
+    """The f32 served copy adds a dtype-cast term on top of the float64
+    certificate — the cache must not claim the raw bound for it."""
+    from repro.core.incremental import RankingCache
+    g, act, _, _ = platform
+    eng = make_engine("push", graph=g, activity=act)
+    res = eng.run(tol=1e-10)
+    raw = eng.psi_error_bound()
+    cache = RankingCache(np.asarray(res.psi), err_bound=raw)  # f32 copy
+    cert = cache.top_k_certified(3)
+    eps_term = np.finfo(np.float32).eps * np.abs(np.asarray(res.psi)).max()
+    assert cert.err_bound >= raw + 0.5 * eps_term
+
+
+# --------------------------------------------------------------------- #
+# Freshness: certified staleness bound (satellite)
+# --------------------------------------------------------------------- #
+def _report(**kw):
+    base = dict(event_time=1.0, resolve_time=1.0, events_total=10,
+                events_buffered=0, events_unresolved=0, dirty_users=0,
+                dirty_mass=0.0, resolves=1)
+    base.update(kw)
+    return FreshnessReport(**base)
+
+
+def test_freshness_certify_max_psi_error():
+    assert _report(psi_error_bound=1e-8).certify(max_psi_error=1e-6)
+    assert not _report(psi_error_bound=1e-4).certify(max_psi_error=1e-6)
+    # an uncertified ranking can never satisfy a certificate demand
+    assert not _report(psi_error_bound=None).certify(max_psi_error=1e-6)
+    assert _report(psi_error_bound=None).certify(max_events=5)
+
+
+def test_ingestor_reports_push_certificate(platform):
+    from repro.stream import StreamIngestor
+    g, act, _, _ = platform
+    svc = PsiService(g, act, tol=1e-9, backend="push")
+    ing = StreamIngestor(svc)
+    ing.ingest([Post(0.5, 3), Repost(0.8, 7)], resolve_at_end=True)
+    rep = ing.freshness()
+    assert rep.events_unresolved == 0
+    assert rep.psi_error_bound is not None
+    assert rep.certify(max_psi_error=rep.psi_error_bound * 2)
+    # ingest on top of the certified solve → the bound must not outlive it
+    ing.submit(Post(1.5, 4))
+    rep2 = ing.freshness()
+    assert rep2.events_unresolved == 1
+    assert rep2.psi_error_bound is None
+    assert not rep2.certify(max_psi_error=1.0)
+
+
+# --------------------------------------------------------------------- #
+# Estimator clock consistency (satellite)
+# --------------------------------------------------------------------- #
+def test_pending_mass_default_matches_drain():
+    """pending_mass() and drain() resolve the same default instant, so the
+    probe's answer equals the mass the very next drain reports."""
+    est = RateEstimator(8, half_life=4.0)
+    for t, u in [(0.5, 1), (1.0, 1), (1.5, 3), (2.0, 5)]:
+        est.observe_post(t, u)
+        est.observe_repost(t + 0.1, u)
+    probe = est.pending_mass()
+    users, lam, mu, drained = est.drain()
+    assert probe == pytest.approx(drained, rel=0, abs=0)
+    assert est.pending_mass() == 0.0
