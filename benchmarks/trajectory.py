@@ -38,6 +38,14 @@ replaces it), so speedups and regressions are measured, not asserted:
   against the true float64 ψ error (acceptance at 0.1 % dirty:
   work_frac ≤ 5 %, agreement = 1.0, certificate ≥ true error on every
   recorded run).
+* ``chaos_recovery`` — the resilience drill (docs/RESILIENCE.md): the
+  seeded ``FaultPlan`` from ``repro.resilience.check`` (crashes, a stale
+  reader, a torn checkpoint, a NaN patch, dup/reorder/drop feed faults)
+  driven against the streaming stack, then whole-stack recovery +
+  exactly-once replay back to the fault-free fixed point; records the
+  chaos wall as a multiple of the fault-free run, mean time to recover,
+  restarts, degraded serves, and ψ parity vs the fault-free oracle
+  (acceptance: zero unsurvived faults, parity ≤ psi_tol).
 
 Run via ``python -m benchmarks.run --only trajectory`` (add ``--quick`` for
 the CI smoke sizes).
@@ -362,6 +370,36 @@ def run(quick: bool = False, json_path: str = JSON_PATH) -> list[dict]:
              f";cert={'none' if bound_q is None else f'{bound_q:.1e}'}"
              f">=err={true_err:.1e}"
              " (0.1% dirty: <=5% = acceptance)")
+
+    # ---- chaos trajectory: seeded faults → recovery → fixed-point parity #
+    from repro.resilience.check import run_chaos
+
+    n_c, m_c, hz_c = (200, 1_200, 3.0) if quick else (300, 1_800, 4.0)
+    c_report, c_met = run_chaos(n=n_c, m=m_c, horizon=hz_c, seed=0)
+    entries.append(dict(
+        graph="chaos_recovery", backend="resilience",
+        regime="faultplan[seed=0]", n=c_met["n"], m=c_met["m"],
+        dtype=c_met["dtype"], tol=c_met["solver_tol"],
+        wall_s=c_met["chaos_wall_s"], converged=True,
+        gap=c_met["parity_err"], events=c_met["events"],
+        recovered_offset=c_met["offset"], restarts=c_met["restarts"],
+        parity_err=c_met["parity_err"], psi_tol=c_met["psi_tol"],
+        wall_s_fault_free=c_met["oracle_wall_s"],
+        recovery_overhead=c_met["recovery_overhead"],
+        mttr_s=c_met["mttr_s"], degraded_served=c_met["degraded_served"],
+        refetched=c_met["refetched"],
+        duplicates_suppressed=c_met["duplicates_suppressed"],
+        faults_injected=int(sum(c_report.injected.values())),
+        faults_survived=int(sum(c_report.survived.values())),
+        unsurvived=len(c_report.unsurvived)))
+    emit("trajectory/chaos_recovery/overhead",
+         c_met["recovery_overhead"] * 100.0,
+         f"chaos+recovery wall as % of fault-free"
+         f";parity_err={c_met['parity_err']:.1e}"
+         f";mttr={c_met['mttr_s'] * 1e3:.0f}ms"
+         f";faults={int(sum(c_report.injected.values()))}"
+         f";unsurvived={len(c_report.unsurvived)}"
+         " (0 unsurvived = acceptance)")
 
     _append_run(entries, json_path, quick)
     return entries

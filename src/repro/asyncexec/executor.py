@@ -41,6 +41,7 @@ class AsyncDriverReport(DriverReport):
     rejected_certificates: int = 0    # under-tol gaps refused for τ-violation
     epochs: np.ndarray | None = None  # final per-chunk epoch vector
     tau: int = 0
+    converged: bool = True            # certified + sync-verified under tol
 
 
 class AsyncPsiDriver(PsiDriverBase):
@@ -48,22 +49,51 @@ class AsyncPsiDriver(PsiDriverBase):
 
     Same call surface as :class:`~repro.runtime.psi_driver.PsiDriver`:
     ``run(tol=..., max_iter=..., fail_hook=...)`` → a report, plus the
-    elastic :meth:`rechunk`. ``fail_hook(tick)`` receives a monotonically
-    increasing tick (one per epoch-floor advance — the async analogue of
-    the sync driver's chunk index) and returning True drops the in-memory
-    state and restores board + epoch vector from the last checkpoint.
+    elastic :meth:`rechunk`.
 
-    ``delay_hook(chunk, epoch) -> seconds`` injects simulated stragglers
-    (see :class:`~repro.asyncexec.scheduler.AsyncChunkScheduler`).
+    **Hook semantics** (the fault-injection harness in
+    :mod:`repro.resilience.faults` is built on exactly these contracts —
+    see docs/RESILIENCE.md):
+
+    * ``fail_hook(tick) -> bool`` — polled once per *epoch-floor advance*
+      (the async analogue of the sync driver's per-chunk index; it is NOT
+      called once per chunk step, so under heavy skew several chunk steps
+      share one tick). Returning True simulates a whole-process crash: the
+      in-memory board and epoch vector are dropped and restored from the
+      last complete checkpoint (``ckpt_dir`` required for the restore to
+      find anything; without it the restart silently resumes cold). The
+      hook runs on the scheduling thread — keep it cheap.
+    * ``delay_hook(chunk, epoch) -> seconds`` — a *straggler*: the chunk's
+      worker sleeps that long before computing, holding its slice at the
+      old epoch. The staleness bound τ then throttles the rest of the
+      pipeline; a hang longer than the supervisor's attempt deadline is
+      indistinguishable from a dead worker and is escalated there.
+    * ``read_hook(reader, neighbor, epochs) -> lag`` — forces ``reader``'s
+      next step to consume ``neighbor``'s slice from ``lag`` epochs ago,
+      served from the epoch-tagged history ring (lag is clamped to
+      ``[0, τ]`` — the harness can exercise the certificate's staleness
+      correction but cannot fake a τ-violation the bound would forbid).
+      Production runs leave it None: reads are latest-snapshot and their
+      staleness arises only from genuine pipeline skew.
+
+    ``host=`` shares an existing :class:`HostOperators` mirror instead of
+    building one from (graph, activity) — the crash-recovery path and
+    :meth:`rechunk` use it so the successor sees bit-identical w/row_lam
+    accumulators (a rebuild from the re-exported graph would re-sum them
+    in a different order and drift by ulps, breaking fixed-point parity).
     """
 
-    def __init__(self, graph: Graph, activity, *, num_chunks: int = 4,
+    def __init__(self, graph: Graph | None = None, activity=None, *,
+                 num_chunks: int = 4,
                  tau: int = 2, ckpt_dir: str | None = None,
                  ckpt_every: int = 8, deadline_factor: float = 3.0,
                  dtype=jnp.float32, max_workers: int | None = None,
                  delay_hook: Callable[[int, int], float] | None = None,
-                 read_hook=None):
+                 read_hook=None, host: HostOperators | None = None):
         super().__init__(ckpt_dir=ckpt_dir, deadline_factor=deadline_factor)
+        if host is None and (graph is None or activity is None):
+            raise ValueError("AsyncPsiDriver needs (graph, activity) "
+                             "or host=")
         self.num_chunks = int(num_chunks)
         self.tau = int(tau)
         self.ckpt_every = int(ckpt_every)
@@ -71,7 +101,8 @@ class AsyncPsiDriver(PsiDriverBase):
         self.max_workers = max_workers
         self.delay_hook = delay_hook
         self.read_hook = read_hook
-        self.host = HostOperators.from_graph(graph, activity)
+        self.host = (host if host is not None
+                     else HostOperators.from_graph(graph, activity))
         self.ops = self.host.to_device(dtype)
         self.chunked = ChunkedOperators(self.host, num_chunks, dtype=dtype)
         self.sched = AsyncChunkScheduler(
@@ -196,7 +227,7 @@ class AsyncPsiDriver(PsiDriverBase):
             overlap_efficiency=out.overlap_efficiency,
             sync_sweeps=out.sync_sweeps,
             rejected_certificates=out.rejected_certificates,
-            epochs=out.epochs, tau=self.tau)
+            epochs=out.epochs, tau=self.tau, converged=bool(out.converged))
 
     # ------------------------------------------------------------------ #
     def rechunk(self, num_chunks: int, *, tau: int | None = None
@@ -205,8 +236,10 @@ class AsyncPsiDriver(PsiDriverBase):
         (the async analogue of ``PsiDriver.remesh``). The next ``run``
         warm-starts the new pipeline from the converted board."""
         s_node = self.chunked.node_order(self.sched.board)
+        # host= (not graph()/activity() re-export): the successor inherits
+        # the same accumulator state, so the fixed point is bit-identical
         driver = AsyncPsiDriver(
-            self.host.graph(), self.host.activity(),
+            host=self.host,
             num_chunks=num_chunks, tau=self.tau if tau is None else tau,
             ckpt_dir=self.ckpt_dir, ckpt_every=self.ckpt_every,
             deadline_factor=self.deadline_factor, dtype=self.dtype,

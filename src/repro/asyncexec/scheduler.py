@@ -250,6 +250,7 @@ class AsyncChunkScheduler:
         self.step_log: list[tuple[int, int, float]] = []   # (chunk, epoch, s)
         self.patches_applied = 0
         self._restore: tuple[np.ndarray, np.ndarray] | None = None
+        self._cancelled = False
         self.reset()
 
     # -- state ----------------------------------------------------------- #
@@ -290,6 +291,20 @@ class AsyncChunkScheduler:
         checkpointed (board, epoch-vector) pair (callable from
         ``epoch_callback``)."""
         self._restore = (np.asarray(s), np.asarray(epochs, np.int64))
+
+    def cancel(self) -> None:
+        """Cooperatively abort the current :meth:`run` — thread-safe, so a
+        watchdog (e.g. the resilience supervisor's per-attempt deadline
+        timer) can call it while the scheduling thread is inside the loop.
+        The run returns its current (unconverged) state at the next loop
+        check; hung workers are abandoned to the pool rather than joined,
+        so a stuck chunk cannot hold the deadline hostage."""
+        self._cancelled = True
+
+    @property
+    def cancelled(self) -> bool:
+        """True when the last :meth:`run` exited via :meth:`cancel`."""
+        return self._cancelled
 
     # -- mid-flight patches ---------------------------------------------- #
     def patch_node_arrays(self, users=None) -> None:
@@ -388,10 +403,14 @@ class AsyncChunkScheduler:
         converged = False
         gap = float("inf")
         self.step_log.clear()            # per-run forensics (see driver)
+        self._cancelled = False          # a prior run's cancel doesn't carry
         t_start = time.perf_counter()
         inflight: dict[int, tuple] = {}
-        with ThreadPoolExecutor(max_workers=self.max_workers or C) as pool:
+        pool = ThreadPoolExecutor(max_workers=self.max_workers or C)
+        try:
             while True:
+                if self._cancelled:
+                    break
                 min_e = int(self.epochs.min())
                 for k in range(C):
                     if k in inflight or self.epochs[k] >= max_epochs:
@@ -409,8 +428,10 @@ class AsyncChunkScheduler:
                         delay), self._gen)
                 if not inflight:
                     break                             # epoch budget exhausted
+                # bounded wait: a hung worker (fault injection, a wedged
+                # device) must not block the cancel check above forever
                 wait([f for f, _ in inflight.values()],
-                     return_when=FIRST_COMPLETED)
+                     return_when=FIRST_COMPLETED, timeout=0.2)
                 for k in [k for k, (f, _) in inflight.items() if f.done()]:
                     fut, gen = inflight.pop(k)
                     s_new, raw, dur = fut.result()
@@ -472,6 +493,16 @@ class AsyncChunkScheduler:
                 if gap <= tol:
                     converged = True
                     break
+        finally:
+            if self._cancelled:
+                # abandon hung workers: drop queued steps, don't join the
+                # running ones — their results are never published (inflight
+                # is dead after return) and the threads drain in background
+                for f, _ in inflight.values():
+                    f.cancel()
+                pool.shutdown(wait=False, cancel_futures=True)
+            else:
+                pool.shutdown(wait=True)
         wall = time.perf_counter() - t_start
         if not converged and gap == float("inf") and self._gaps[0]:
             gap = scale * sum(g[0] for g in self._gaps if g)

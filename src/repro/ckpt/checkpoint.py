@@ -5,17 +5,39 @@ Writes go to ``step_<n>.tmp`` and are renamed only after the manifest is
 fsynced — a torn write can never be mistaken for a valid checkpoint, so
 restart always finds the last *complete* step (checkpoint/restart
 correctness under mid-write failure is tested in tests/test_runtime.py).
+
+Corruption + concurrency hardening (docs/RESILIENCE.md):
+
+* :func:`latest_step` only reports *complete* steps — the manifest must
+  parse as JSON and every host shard it lists must exist on disk. A
+  truncated manifest or a missing ``host_*.npz`` demotes that step with a
+  warning (never an exception) and the previous complete step serves.
+* :func:`restore_latest` walks complete steps newest-first and falls back
+  on *any* load failure — including the race where a concurrent
+  ``save(keep=…)`` GC pruned the step between ``latest_step`` and the
+  ``np.load`` (tests/test_resilience.py covers the interleaving).
+* :func:`restore` (explicit step) still raises: a caller naming a step
+  wants that step or an error, and a shape mismatch against the template
+  is a caller bug, not corruption.
 """
 from __future__ import annotations
 
 import json
 import os
 import shutil
+import warnings
+import zipfile
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "all_steps"]
+__all__ = ["save", "restore", "restore_latest", "latest_step", "all_steps",
+           "complete_steps", "load_arrays"]
+
+#: exceptions that mean "this step is corrupt / torn / concurrently pruned"
+#: rather than a caller bug — the fallback walkers skip on exactly these
+_CORRUPT_ERRORS = (OSError, EOFError, KeyError, ValueError,
+                   json.JSONDecodeError, zipfile.BadZipFile)
 
 
 def _flatten(tree):
@@ -57,6 +79,8 @@ def _gc(directory: str, keep: int) -> None:
 
 
 def all_steps(directory: str) -> list[int]:
+    """Every step directory with a MANIFEST.json *present* (not validated —
+    the GC uses this; readers should prefer :func:`complete_steps`)."""
     if not os.path.isdir(directory):
         return []
     out = []
@@ -67,13 +91,59 @@ def all_steps(directory: str) -> list[int]:
     return sorted(out)
 
 
+def _is_complete(directory: str, step: int) -> bool:
+    """A step is complete when its manifest parses and every host shard it
+    lists exists. Truncated manifests and missing ``host_*.npz`` (torn
+    writes on filesystems without atomic rename, partial copies, …) fail
+    here and are skipped by the readers instead of raising."""
+    base = os.path.join(directory, f"step_{step:08d}")
+    try:
+        with open(os.path.join(base, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        hosts = manifest.get("hosts", [0])
+        return all(os.path.exists(os.path.join(base, f"host_{h}.npz"))
+                   for h in hosts)
+    except _CORRUPT_ERRORS:
+        return False
+
+
+def complete_steps(directory: str) -> list[int]:
+    """Steps whose manifest parses and whose host shards all exist."""
+    return [s for s in all_steps(directory) if _is_complete(directory, s)]
+
+
 def latest_step(directory: str) -> int | None:
-    steps = all_steps(directory)
-    return steps[-1] if steps else None
+    """The newest *complete* step (corrupt/truncated steps are skipped with
+    a warning — restart falls back to the previous good one, it never
+    crashes on a torn manifest)."""
+    for s in reversed(all_steps(directory)):
+        if _is_complete(directory, s):
+            return s
+        warnings.warn(
+            f"checkpoint step {s} in {directory} is corrupt or incomplete "
+            "(unparseable MANIFEST.json or missing host shard); falling "
+            "back to the previous complete step", RuntimeWarning,
+            stacklevel=2)
+    return None
+
+
+def load_arrays(directory: str, step: int, *, host: int = 0
+                ) -> dict[str, np.ndarray]:
+    """The flat ``key → array`` mapping of one host shard, template-free
+    (keys are the ``/``-joined tree paths :func:`save` flattened). The
+    whole-stack recovery path (repro.resilience.recovery) reconstructs
+    mutable host state from this — shapes there are data, not a template."""
+    path = os.path.join(directory, f"step_{step:08d}", f"host_{host}.npz")
+    with np.load(path) as data:
+        return {k: data[k].copy() for k in data.files}
 
 
 def restore(directory: str, step: int, template, *, host: int = 0):
-    """Restore into the structure of ``template`` (shapes validated)."""
+    """Restore into the structure of ``template`` (shapes validated).
+
+    Raises on a missing/corrupt step or a shape mismatch — callers naming
+    an explicit step want that step or an error. Use :func:`restore_latest`
+    for the fall-back-to-previous-complete-step behavior."""
     path = os.path.join(directory, f"step_{step:08d}", f"host_{host}.npz")
     data = np.load(path)
     leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
@@ -86,6 +156,31 @@ def restore(directory: str, step: int, template, *, host: int = 0):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {np.shape(leaf)}")
         new_leaves.append(arr)
-    return jax.tree_util.tree_unflatten(
-        treedef, [l for _, l in zip(leaves, new_leaves)]) if False else \
-        jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def restore_latest(directory: str, template, *, host: int = 0):
+    """Restore the newest step that actually loads, walking backwards.
+
+    Any load failure — corrupt manifest, truncated npz, a shape that no
+    longer matches the template, or the step vanishing because a
+    concurrent ``save(keep=…)`` GC pruned it between listing and load —
+    demotes that step with a warning and the walk continues. Returns the
+    restored tree, or None when no step could be restored."""
+    for s in reversed(all_steps(directory)):
+        if not _is_complete(directory, s):
+            warnings.warn(
+                f"checkpoint step {s} in {directory} is corrupt or "
+                "incomplete; trying the previous step", RuntimeWarning,
+                stacklevel=2)
+            continue
+        try:
+            return restore(directory, s, template, host=host)
+        except _CORRUPT_ERRORS as e:
+            # includes the GC race: _is_complete saw the step, the rmtree
+            # landed before np.load — FileNotFoundError is an OSError
+            warnings.warn(
+                f"checkpoint step {s} in {directory} failed to load "
+                f"({type(e).__name__}: {e}); trying the previous step",
+                RuntimeWarning, stacklevel=2)
+    return None

@@ -28,6 +28,7 @@ import numpy as np
 from ..graphs.structure import Graph
 from .activity import Activity
 from .engine import PsiEngine, make_engine
+from .operators import _validate_rates
 from .power_psi import PsiResult
 
 __all__ = ["PsiService", "RankingCache", "RankedQueries"]
@@ -215,6 +216,11 @@ class PsiService(RankedQueries):
         users = np.asarray(users).reshape(-1)
         if users.size == 0:
             return
+        # reject NaN/Inf/negative rates here, before any engine is touched:
+        # every backend's patch path must see only finite ≥ 0 rates, and a
+        # rejected patch must leave the service serving its current fixed
+        # point (HostOperators.patch_activity re-checks as a second wall)
+        _validate_rates(lam, mu)
         if not self._engine.patch_activity(users, lam=lam, mu=mu):
             self._full_rebuild(activity=self._patched_activity(users, lam, mu))
         self._pending = True

@@ -150,6 +150,31 @@ def _concat_ranges(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
     return np.concatenate([np.arange(l, h) for l, h in zip(lo, hi)])
 
 
+def _validate_rates(lam: np.ndarray | None, mu: np.ndarray | None) -> None:
+    """Reject NaN/Inf and negative rates at the mutation boundary.
+
+    The ``Activity`` constructor validates full vectors at build time, but
+    incremental patches bypass it — a single poisoned λ would silently
+    corrupt the w/row_lam accumulators of every follower it touches (and a
+    NaN never washes out of an incremental sum). Raise *before* any state
+    is mutated so a rejected patch leaves the operators untouched.
+    """
+    for name, arr in (("lam", lam), ("mu", mu)):
+        if arr is None:
+            continue
+        arr = np.asarray(arr)
+        if not np.all(np.isfinite(arr)):
+            raise ValueError(
+                f"non-finite {name} in activity patch "
+                f"(offending values include "
+                f"{arr[~np.isfinite(arr)][:3].tolist()})")
+        if np.any(arr < 0):
+            raise ValueError(
+                f"negative {name} in activity patch (rates are event "
+                f"intensities ≥ 0; offending values include "
+                f"{arr[arr < 0][:3].tolist()})")
+
+
 def _dedup_keep_last(users: np.ndarray, *cols: np.ndarray):
     """Unique users, keeping the *last* occurrence of each (update semantics)."""
     rev = users[::-1]
@@ -250,6 +275,7 @@ class HostOperators:
         if mu is not None:      # indexing assignment did before the refactor
             mu = np.broadcast_to(np.asarray(mu, np.float64), users.shape)
         users, (lam, mu) = _dedup_keep_last(users, lam, mu)
+        _validate_rates(lam, mu)
         new_lam = self.lam[users] if lam is None else lam
         new_mu = self.mu[users] if mu is None else mu
         dl = new_lam - self.lam[users]

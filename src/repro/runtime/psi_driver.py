@@ -116,10 +116,11 @@ class PsiDriverBase:
     def _ckpt_restore_latest(self, template: dict) -> dict | None:
         if not self.ckpt_dir:
             return None
-        step = checkpoint.latest_step(self.ckpt_dir)
-        if step is None:
-            return None
-        return checkpoint.restore(self.ckpt_dir, step, template)
+        # restore_latest (not latest_step + restore): it skips corrupt /
+        # torn steps and tolerates a concurrent save(keep=…) GC pruning the
+        # step between listing and load, falling back to the previous
+        # complete one instead of crashing the restart
+        return checkpoint.restore_latest(self.ckpt_dir, template)
 
 
 class PsiDriver(PsiDriverBase):

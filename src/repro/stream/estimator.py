@@ -95,6 +95,11 @@ class RateEstimator:
     def _tick(self, kind: int, t: float, user: int) -> None:
         if not 0 <= user < self.n:
             raise ValueError(f"user {user} out of range [0, {self.n})")
+        if not math.isfinite(t):
+            # a NaN timestamp would poison _last/_cnt and from there every
+            # drained rate — reject at the boundary, state untouched
+            raise ValueError(f"non-finite event timestamp {t!r} "
+                             f"for user {user}")
         dt = t - self._last[user]
         if dt < 0:                   # same-window jitter: clamp, don't grow
             dt = 0.0
@@ -181,10 +186,43 @@ class RateEstimator:
         if users.size == 0:
             return users, np.empty(0), np.empty(0), 0.0
         est = self._rates_at(self._at(t), users)
+        if not np.all(np.isfinite(est)):
+            # belt to _tick's suspenders: no drained patch may ever carry a
+            # non-finite rate into update_activity/patch_activity
+            raise ValueError("non-finite rate estimate in drain; the "
+                             "estimator state is corrupt (was a non-finite "
+                             "timestamp injected around validation?)")
         mass = float(np.abs(est - self._synced[:, users]).sum())
         self._synced[:, users] = est
         self._touched[users] = False
         return users, est[0].copy(), est[1].copy(), mass
+
+    # -- persistence (crash recovery) ------------------------------------ #
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """The complete mutable state as flat numpy arrays — checkpointable
+        through ``ckpt.checkpoint`` alongside the solver board. Estimator
+        state depends only on the *event order*, not on drain boundaries,
+        so a restore + exactly-once replay from the persisted offset lands
+        on bit-identical rates (repro.resilience.recovery relies on this).
+        """
+        return dict(
+            cnt=self._cnt.copy(), last=self._last.copy(),
+            touched=self._touched.copy(), synced=self._synced.copy(),
+            scalars=np.asarray([self.t, self.t0, float(self.events)]),
+        )
+
+    def load_state(self, state: dict[str, np.ndarray]) -> None:
+        """Restore :meth:`state_dict` output (shapes must match ``n``)."""
+        cnt = np.asarray(state["cnt"], np.float64)
+        if cnt.shape != (2, self.n):
+            raise ValueError(f"estimator state is for n={cnt.shape[-1]}, "
+                             f"this estimator has n={self.n}")
+        self._cnt = cnt.copy()
+        self._last = np.asarray(state["last"], np.float64).copy()
+        self._touched = np.asarray(state["touched"], bool).copy()
+        self._synced = np.asarray(state["synced"], np.float64).copy()
+        t, t0, events = np.asarray(state["scalars"], np.float64)
+        self.t, self.t0, self.events = float(t), float(t0), int(events)
 
     def sync_to(self, activity: Activity) -> None:
         """Declare the target's current rates (e.g. its admission-time

@@ -404,6 +404,37 @@ class StreamIngestor:
             self.resolve()
         return self.freshness()
 
+    # -- persisted offset (crash recovery) -------------------------------- #
+    @property
+    def offset(self) -> int:
+        """Events consumed so far — the replay cursor a stack checkpoint
+        persists. Checkpoints are taken at *flushed* points (buffered = 0,
+        no pending edge ops), so a recovery that replays the event log from
+        this offset reconstructs exactly the un-applied suffix; the
+        estimator's :meth:`~repro.stream.estimator.RateEstimator.state_dict`
+        carries the applied prefix (repro.resilience.recovery composes the
+        two)."""
+        return int(self.events_total)
+
+    def fast_forward(self, offset: int, *, event_t: float | None = None
+                     ) -> None:
+        """Declare that the first ``offset`` events of the stream are
+        already reflected in this ingestor's state (restored estimator +
+        restored serving target) — the recovery path's half of the
+        exactly-once contract: events before the offset are never
+        re-applied, events after it arrive via normal :meth:`submit` /
+        :meth:`pump` replay. Only valid on a quiescent ingestor (nothing
+        buffered, nothing ingested yet through this instance)."""
+        if self._buffered or self.events_total:
+            raise RuntimeError("fast_forward on a non-quiescent ingestor "
+                               f"(buffered={self._buffered}, "
+                               f"events_total={self.events_total})")
+        self.events_total = int(offset)
+        self._resolved_events = int(offset)
+        if event_t is not None:
+            self._event_t = float(event_t)
+            self._resolve_t = float(event_t)
+
     # -- mid-flight feeding (async driver epoch_hook) -------------------- #
     def attach(self, source: Iterable) -> None:
         """Stage a source for incremental :meth:`pump` consumption."""

@@ -1,0 +1,382 @@
+"""Chaos suite: fault injection, numerical sentinels, quarantine, the
+supervised-resolve ladder, and crash-consistent exactly-once recovery
+(docs/RESILIENCE.md). The f64 acceptance gate (ψ parity ≤ 1e-12) runs in a
+spawned x64 subprocess, mirroring the CI smoke step."""
+import glob
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint
+from repro.core import HostOperators, PsiService, heterogeneous, make_engine
+from repro.graphs import erdos_renyi, powerlaw_configuration
+from repro.asyncexec import AsyncPsiDriver
+from repro.resilience import (ExactlyOnceReplay, FaultPlan, LaneQuarantine,
+                              ResilientResolver, Sentinels, ServiceGuard,
+                              alpha_norm, psi_residual_bound)
+from repro.resilience.check import run_chaos
+from repro.serving import BucketPolicy, TenantFleet
+from repro.stream.estimator import RateEstimator
+from repro.stream.events import poisson_stream
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _tree(n=5, salt=0.0):
+    return dict(a=np.arange(n) + salt, b=np.full(3, salt))
+
+
+def _truncate(path: str, frac: float = 0.5) -> None:
+    with open(path) as f:
+        text = f.read()
+    with open(path, "w") as f:
+        f.write(text[: max(1, int(len(text) * frac))])
+
+
+# --------------------------------------------------------------------- #
+# S1/S3: checkpoint hardening — torn manifests, missing shards, GC races
+# --------------------------------------------------------------------- #
+def test_truncated_manifest_falls_back_to_previous_step():
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3):
+            checkpoint.save(d, s, _tree(salt=float(s)))
+        _truncate(os.path.join(d, "step_00000003", "MANIFEST.json"))
+        with pytest.warns(RuntimeWarning):
+            assert checkpoint.latest_step(d) == 2
+        with pytest.warns(RuntimeWarning):
+            data = checkpoint.restore_latest(d, _tree())
+        assert data is not None and data["a"][0] == 2.0
+        # explicit-step restore of a step that isn't there must raise
+        with pytest.raises((ValueError, OSError, KeyError)):
+            checkpoint.restore(d, 99, _tree())
+
+
+def test_missing_shard_falls_back():
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, 1, _tree(salt=1.0))
+        checkpoint.save(d, 2, _tree(salt=2.0))
+        shard = glob.glob(os.path.join(d, "step_00000002", "host_*.npz"))[0]
+        os.remove(shard)
+        with pytest.warns(RuntimeWarning):
+            data = checkpoint.restore_latest(d, _tree())
+        assert data["a"][0] == 1.0
+        assert checkpoint.complete_steps(d) == [1]
+        # explicit-step restore of the gutted step must raise, not guess
+        with pytest.raises((ValueError, OSError, KeyError)):
+            checkpoint.restore(d, 2, _tree())
+
+
+def test_gc_race_mid_restore_is_survived():
+    # a concurrent save(keep=...) can prune a step after all_steps() listed
+    # it; the walker must skip the vanished/corrupted step, not crash
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3):
+            checkpoint.save(d, s, _tree(salt=float(s)))
+        step3 = os.path.join(d, "step_00000003")
+        for f in glob.glob(os.path.join(step3, "host_*.npz")):
+            os.remove(f)                     # manifest still lists them
+        with pytest.warns(RuntimeWarning):
+            data = checkpoint.restore_latest(d, _tree())
+        assert data["a"][0] == 2.0
+        # GC itself keeps only complete newest steps reachable
+        checkpoint.save(d, 4, _tree(salt=4.0), keep=2)
+        assert 1 not in checkpoint.all_steps(d)
+
+
+def test_every_checkpoint_torn_returns_none():
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, 1, _tree())
+        _truncate(os.path.join(d, "step_00000001", "MANIFEST.json"))
+        with pytest.warns(RuntimeWarning):
+            assert checkpoint.restore_latest(d, _tree()) is None
+
+
+# --------------------------------------------------------------------- #
+# S2: rate validation at every mutation boundary
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def small_platform():
+    g = erdos_renyi(120, 700, seed=7)
+    act = heterogeneous(g.n, seed=8)
+    return g, act
+
+
+@pytest.mark.parametrize("bad", [np.nan, np.inf, -np.inf, -0.5])
+def test_host_operators_reject_bad_rates(small_platform, bad):
+    g, act = small_platform
+    host = HostOperators.from_graph(g, act)
+    lam0, mu0 = host.lam.copy(), host.mu.copy()
+    with pytest.raises(ValueError):
+        host.patch_activity(np.asarray([3]), lam=np.asarray([bad]))
+    with pytest.raises(ValueError):
+        host.patch_activity(np.asarray([3]), mu=np.asarray([bad]))
+    assert np.array_equal(host.lam, lam0) and np.array_equal(host.mu, mu0)
+
+
+def test_psi_service_rejects_bad_rates(small_platform):
+    g, act = small_platform
+    svc = PsiService(g, act, tol=1e-8)
+    before = svc.scores().copy()
+    with pytest.raises(ValueError):
+        svc.update_activity(np.asarray([1]), lam=np.asarray([np.nan]))
+    with pytest.raises(ValueError):
+        svc.update_activity(np.asarray([1]), mu=np.asarray([-2.0]))
+    assert np.array_equal(svc.scores(), before)
+
+
+def test_estimator_rejects_non_finite_timestamp():
+    est = RateEstimator(10)
+    est.observe_post(1.0, 3)
+    state = est.state_dict()
+    with pytest.raises(ValueError):
+        est.observe_post(float("nan"), 3)
+    with pytest.raises(ValueError):
+        est.observe_repost(float("inf"), 4)
+    after = est.state_dict()
+    assert all(np.array_equal(state[k], after[k]) for k in state)
+
+
+def test_estimator_state_roundtrip():
+    est = RateEstimator(12, half_life=8.0)
+    for t in range(1, 30):
+        est.observe_post(float(t), t % 12)
+        est.observe_repost(float(t) + 0.5, (t * 5) % 12)
+    est.drain(20.0)
+    clone = RateEstimator(12, half_life=8.0)
+    clone.load_state(est.state_dict())
+    a, b = est.activity(30.0), clone.activity(30.0)
+    assert np.array_equal(a.lam, b.lam) and np.array_equal(a.mu, b.mu)
+
+
+# --------------------------------------------------------------------- #
+# Fault harness: determinism + exactly-once transport repair
+# --------------------------------------------------------------------- #
+def test_faulty_feed_is_deterministic_and_repairable(small_platform):
+    g, act = small_platform
+    log = poisson_stream(act, 3.0, seed=11, graph=g)
+    plan = FaultPlan(seed=3, dup_every=7, drop_every=11, reorder_window=4)
+
+    runs = []
+    for _ in range(2):
+        clock = plan.clock()
+        feed = clock.wrap_source(log)
+        runs.append(([*feed], dict(clock.injected)))
+    assert runs[0] == runs[1], "same plan, same workload, different faults"
+    inj = runs[0][1]
+    assert inj["dup"] >= 1 and inj["drop"] >= 1 and inj["reorder"] >= 1
+
+    clock = plan.clock()
+    replay = ExactlyOnceReplay(log, clock.wrap_source(log))
+    assert list(replay) == list(log)
+    assert replay.refetched >= 1 and replay.duplicates_suppressed >= 1
+
+    # mid-log start offset: the recovery path's replay cut
+    start = len(log) // 2
+    replay = ExactlyOnceReplay(log, clock.wrap_source(log, start=start),
+                               start=start)
+    assert list(replay) == list(log)[start:]
+
+
+@pytest.mark.parametrize("kind,field", [("nan", 0), ("inf", 1),
+                                        ("negative", 0)])
+def test_poisoned_patches_die_at_the_validation_wall(small_platform,
+                                                     kind, field):
+    g, act = small_platform
+    host = HostOperators.from_graph(g, act)
+    clock = FaultPlan(seed=5, poison_kind=kind).clock()
+    users = np.arange(6)
+    pu, pl, pm = clock.poison_patch(users, host.lam[users], host.mu[users])
+    bad = pl if field == 0 else pm
+    assert not np.all(np.isfinite(bad) & (bad >= 0))
+    with pytest.raises(ValueError):
+        host.patch_activity(pu, lam=pl, mu=pm)
+
+
+# --------------------------------------------------------------------- #
+# Sentinels + quarantine
+# --------------------------------------------------------------------- #
+def test_sentinels_trip_on_the_right_symptoms(small_platform):
+    g, act = small_platform
+    s = Sentinels(gap_window=3)
+    assert s.check_array("psi", np.ones(4)) is None
+    assert s.check_array("psi", np.asarray([1.0, np.nan])).kind == "non_finite"
+    assert s.check_gap(float("inf")).kind == "non_finite"
+    s.reset_gap()
+    trips = [s.check_gap(gap) for gap in (1.0, 2.0, 3.0, 4.0)]
+    assert trips[:3] == [None, None, None]
+    assert trips[3].kind == "gap_growth"
+    host = HostOperators.from_graph(g, act)
+    a = alpha_norm(host)
+    assert 0.0 < a < 1.0
+    assert Sentinels(alpha_max=a * 0.9).check_alpha(host).kind == "alpha"
+    bound = psi_residual_bound(host, 1e-6)
+    assert bound is not None and 0.0 < bound < 1e-3
+    assert psi_residual_bound(host, float("nan")) is None
+
+
+def test_lane_quarantine_freezes_one_tenant_not_the_fleet(small_platform):
+    g0, act0 = small_platform
+    g1 = powerlaw_configuration(140, 900, seed=21)
+    act1 = heterogeneous(g1.n, seed=22)
+    fleet = TenantFleet(backend="reference", tol=1e-8,
+                        policy=BucketPolicy((512,), edge_quantum=4096))
+    fleet.admit("t0", g0, act0)
+    fleet.admit("t1", g1, act1)
+    fleet.solve()
+    before = fleet.psi("t0").copy()
+    quar = LaneQuarantine(fleet, sentinels=Sentinels(alpha_max=0.999))
+
+    # NaN-poison: rejected at the wall, lane frozen serving last-good
+    clock = FaultPlan(seed=9, poison_kind="nan").clock()
+    users = np.arange(4)
+    host0 = fleet._rec("t0").host
+    pu, pl, pm = clock.poison_patch(users, host0.lam[users], host0.mu[users])
+    assert not quar.patch_activity("t0", pu, lam=pl, mu=pm)
+    assert quar.is_frozen("t0") and quar.frozen == ("t0",)
+    assert np.array_equal(quar.psi("t0"), before)
+    # further patches to the frozen lane are refused outright
+    assert not quar.patch_activity("t0", np.asarray([2]),
+                                   lam=np.asarray([0.5]))
+
+    # the co-tenant stays fully live
+    assert quar.patch_activity("t1", np.asarray([5]), mu=np.asarray([0.9]))
+    assert not quar.is_frozen("t1")
+    idx, top = quar.top_k("t1", 5)
+    assert idx.shape == (5,) and np.all(np.diff(top) <= 0)
+
+    # α-poison passes validation but is reverted + frozen by the sentinel
+    quar.unfreeze("t0")
+    lam0, mu0 = host0.lam.copy(), host0.mu.copy()
+    assert not quar.patch_activity("t0", np.asarray([3]),
+                                   mu=np.asarray([1e12]))
+    assert quar.is_frozen("t0") and quar.reverted_patches == 1
+    assert np.array_equal(host0.lam, lam0) and np.array_equal(host0.mu, mu0)
+
+
+def test_service_guard_rolls_back_to_last_checkpoint(small_platform):
+    g, act = small_platform
+    with tempfile.TemporaryDirectory() as d:
+        svc = PsiService(g, act, tol=1e-8, max_iter=400)
+        guard = ServiceGuard(svc, d, sentinels=Sentinels(alpha_max=0.999))
+        assert guard.update_activity(np.asarray([4]), lam=np.asarray([1.3]))
+        good = guard.scores().copy()
+
+        # validation-wall rejection leaves the service serving, untouched
+        assert not guard.update_activity(np.asarray([4]),
+                                         lam=np.asarray([np.nan]))
+        assert guard.rejected_patches == 1
+        assert np.array_equal(guard.scores(), good)
+
+        # α-poison passes validation; the post-resolve sentinel trips and
+        # the guard rolls back to the last complete checkpoint
+        assert not guard.update_activity(np.asarray([2]),
+                                         mu=np.asarray([1e12]))
+        assert guard.rollbacks == 1
+        assert np.abs(guard.scores() - good).max() <= 1e-6
+
+
+# --------------------------------------------------------------------- #
+# Supervisor ladder
+# --------------------------------------------------------------------- #
+def _hanging_driver(g, act, hang_budget, **kw):
+    def delay(chunk, epoch):
+        if hang_budget[0] > 0 and chunk == 0:
+            hang_budget[0] -= 1
+            return 1.0
+        return 0.0
+
+    return AsyncPsiDriver(g, act, num_chunks=2, tau=1, delay_hook=delay, **kw)
+
+
+def test_supervisor_retry_absorbs_a_transient_hang(small_platform):
+    g, act = small_platform
+    budget = [0]
+    sup = ResilientResolver(_hanging_driver(g, act, budget), tol=1e-7,
+                            attempt_deadline_s=0.35, max_retries=1,
+                            backoff_s=0.01, allow_rechunk=False,
+                            allow_sync=False)
+    budget[0] = 1
+    out = sup.resolve(warm=False)
+    assert not out.degraded and out.escalation == "retry"
+    assert out.attempts == 2 and sup.report.retries == 1
+    assert sup.report.recoveries == 1 and sup.report.mttr_s > 0
+    assert out.psi_error_bound is not None
+
+
+def test_supervisor_escalates_to_tau_tightened_rechunk(small_platform):
+    g, act = small_platform
+    budget = [1]                            # one hang: sinks attempt 1 only
+    sup = ResilientResolver(_hanging_driver(g, act, budget), tol=1e-7,
+                            attempt_deadline_s=0.3, max_retries=0,
+                            allow_rechunk=True, allow_sync=False)
+    out = sup.resolve(warm=False)
+    # retries exhausted -> the pipeline is rebuilt barriered (tau = 0)
+    assert not out.degraded and out.escalation == "rechunk"
+    assert sup.driver.tau == 0 and sup.report.escalations == ["rechunk"]
+
+
+def test_supervisor_sync_rung_and_degraded_tagging(small_platform):
+    g, act = small_platform
+    psi_true = np.asarray(make_engine("reference", graph=g, activity=act)
+                          .run(tol=1e-9).psi)
+    budget = [10 ** 9]
+    sup = ResilientResolver(_hanging_driver(g, act, budget), tol=1e-7,
+                            attempt_deadline_s=0.3, max_retries=0,
+                            allow_rechunk=False, allow_sync=True)
+    out = sup.resolve(warm=False)
+    assert not out.degraded and out.escalation == "sync"
+    assert np.abs(np.asarray(out.psi) - psi_true).max() <= 1e-5
+    assert out.psi_error_bound is not None and out.psi_error_bound < 1e-3
+
+    # now every live rung is off: serve degraded from the sync result,
+    # honestly tagged with staleness + the certified error bound
+    sup.allow_sync = False
+    degraded = sup.resolve(warm=False)
+    assert degraded.degraded and degraded.escalation == "degraded"
+    assert degraded.freshness is not None
+    assert degraded.freshness.staleness_seconds >= 0.0
+    assert degraded.freshness.psi_error_bound == degraded.psi_error_bound
+    assert degraded.ranking.err_bound == degraded.psi_error_bound
+    assert np.array_equal(degraded.psi, out.psi)
+    assert sup.report.degraded_served == 1
+    budget[0] = 0
+
+
+def test_degrade_with_no_prior_fixed_point_raises(small_platform):
+    from repro.resilience import ResolveFailure
+    g, act = small_platform
+    budget = [10 ** 9]
+    sup = ResilientResolver(_hanging_driver(g, act, budget), tol=1e-7,
+                            attempt_deadline_s=0.25, max_retries=0,
+                            allow_rechunk=False, allow_sync=False)
+    with pytest.raises(ResolveFailure):
+        sup.resolve(warm=False)
+    budget[0] = 0
+
+
+# --------------------------------------------------------------------- #
+# The whole stack: seeded chaos → recovery → fixed-point parity
+# --------------------------------------------------------------------- #
+def test_chaos_recovery_reaches_fault_free_fixed_point_f32():
+    report, metrics = run_chaos(n=150, m=900, horizon=2.5, seed=1)
+    assert not report.unsurvived
+    assert metrics["parity_err"] <= metrics["psi_tol"]
+    assert metrics["restarts"] >= 1 and metrics["offset"] > 0
+    assert report.degraded_served >= 1 and report.recoveries >= 1
+
+
+def test_chaos_check_passes_under_x64():
+    """The acceptance gate: f64 recovered-vs-oracle ψ parity ≤ 1e-12,
+    zero unsurvived faults — in a spawned x64 process (pytest runs f32)."""
+    env = dict(os.environ, JAX_ENABLE_X64="1", PYTHONPATH=_SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.resilience.check",
+         "--n", "200", "--m", "1200", "--horizon", "3"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout[-3000:] + out.stderr[-3000:]
+    assert "dtype=float64" in out.stdout
+    assert "[resilience-check] PASS" in out.stdout
