@@ -99,8 +99,13 @@ def _append_run(entries: list[dict], json_path: str, quick: bool) -> None:
         except (json.JSONDecodeError, OSError):
             pass
     label = _run_label()
+    # environment fingerprint: a run entry is only comparable to another
+    # when the device/jax/x64 context it ran under is recorded next to it
+    from repro.obs.env import environment_fingerprint
     doc["runs"] = [r for r in doc.get("runs", []) if r.get("label") != label]
-    doc["runs"].append({"label": label, "quick": quick, "entries": entries})
+    doc["runs"].append({"label": label, "quick": quick,
+                        "environment": environment_fingerprint(),
+                        "entries": entries})
     with open(json_path, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"# wrote {len(entries)} entries to {os.path.abspath(json_path)} "

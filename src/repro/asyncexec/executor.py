@@ -24,6 +24,9 @@ import numpy as np
 
 from ..core.operators import HostOperators
 from ..graphs.structure import Graph
+from ..obs import convergence as obs_convergence
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..runtime.psi_driver import DriverReport, PsiDriverBase
 from .scheduler import AsyncChunkScheduler, ChunkedOperators
 from .staleness import StalenessBound
@@ -208,8 +211,22 @@ class AsyncPsiDriver(PsiDriverBase):
                     s.request_restore(data["s"], data["epochs"])
                     last_ckpt = int(data["it"])
 
-        out = sched.run(tol=tol, max_epochs=max_iter, scale=1.0,
-                        epoch_callback=on_epoch)
+        rec = obs_convergence.begin("async_driver")
+        with obs_trace.span("async.run", tau=self.tau,
+                            num_chunks=self.num_chunks) as sp:
+            out = sched.run(tol=tol, max_epochs=max_iter, scale=1.0,
+                            epoch_callback=on_epoch)
+            sp.sync(out.s)
+        obs_convergence.finish(rec, iterations=int(out.epochs.max()),
+                               gap=out.gap, converged=bool(out.converged),
+                               duration_s=sp.duration_s)
+        obs_metrics.gauge(
+            "psi_async_overlap_efficiency",
+            "sum of worker busy seconds / wall seconds (>1 means overlap)"
+        ).set(out.overlap_efficiency)
+        obs_metrics.gauge("psi_async_max_staleness",
+                          "max epoch spread seen by the last async run"
+                          ).set(out.max_staleness)
         # step_log is per-run (cleared at run entry) and includes drained
         # steps; sync verification sweeps run on the main thread and are
         # reported via sync_sweeps, not per-step durations

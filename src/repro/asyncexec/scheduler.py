@@ -48,6 +48,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.operators import HostOperators
+from ..obs import convergence as obs_convergence
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .staleness import (GapCertificate, RhoEstimator, StalenessBound,
                         certify_gap)
 
@@ -327,13 +330,17 @@ class AsyncChunkScheduler:
         self._gen += 1
 
     # -- execution -------------------------------------------------------- #
-    def _worker(self, args: ChunkArgs, board: jax.Array, delay: float):
-        t0 = time.perf_counter()
-        if delay and delay > 0:
-            time.sleep(float(delay))
-        s_new, gap = self._step(args, board)
-        raw = float(gap)                     # forces the step in the worker
-        return s_new, raw, time.perf_counter() - t0
+    def _worker(self, k: int, args: ChunkArgs, board: jax.Array,
+                delay: float):
+        # the span both times the step (shared clock — step_log, the
+        # psi_chunk_seconds histogram and the trace agree) and exercises
+        # per-thread span stacks: workers run in the scheduler's pool
+        with obs_trace.span("async.step", chunk=k) as sp:
+            if delay and delay > 0:
+                time.sleep(float(delay))
+            s_new, gap = self._step(args, board)
+            raw = float(gap)                 # forces the step in the worker
+        return s_new, raw, sp.duration_s
 
     def _publish(self, k: int, s_new: jax.Array) -> None:
         if self.read_hook is not None:
@@ -424,7 +431,7 @@ class AsyncChunkScheduler:
                                   if self.read_hook is not None
                                   else self.board)
                     inflight[k] = (pool.submit(
-                        self._worker, self.chunked.args[k], board_read,
+                        self._worker, k, self.chunked.args[k], board_read,
                         delay), self._gen)
                 if not inflight:
                     break                             # epoch budget exhausted
@@ -442,6 +449,9 @@ class AsyncChunkScheduler:
                     total_steps += 1
                 spread = int(self.epochs.max() - self.epochs.min())
                 max_stale = max(max_stale, spread)
+                obs_metrics.gauge(
+                    "psi_async_epoch_spread",
+                    "current max-min per-chunk epoch skew").set(spread)
                 new_min = int(self.epochs.min())
                 if new_min > min_e and epoch_callback is not None:
                     epoch_callback(self, new_min)
@@ -466,7 +476,13 @@ class AsyncChunkScheduler:
                     # rejection event
                     if cert.certified_gap <= tol:
                         rejected += 1
+                        obs_metrics.counter(
+                            "psi_async_rejected_certificates_total",
+                            "stale-refused certificates that passed on "
+                            "magnitude").inc()
                     continue
+                obs_convergence.record_gap(total_steps, raw=cert.raw_gap,
+                                           certified=cert.certified_gap)
                 self._rho.update(cert.raw_gap)
                 if cert.certified_gap > tol:
                     continue
@@ -489,6 +505,9 @@ class AsyncChunkScheduler:
                 sync_sweeps += 1
                 total_steps += C
                 gap = scale * raw_sync
+                # the sealing sweep's gap is the *verified* Eq. 19 gap
+                obs_convergence.record_gap(total_steps, raw=raw_sync,
+                                           certified=gap)
                 self._rho.update(gap)
                 if gap <= tol:
                     converged = True

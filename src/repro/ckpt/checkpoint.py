@@ -25,11 +25,12 @@ from __future__ import annotations
 import json
 import os
 import shutil
-import warnings
 import zipfile
 
 import jax
 import numpy as np
+
+from ..obs import log as obs_log
 
 __all__ = ["save", "restore", "restore_latest", "latest_step", "all_steps",
            "complete_steps", "load_arrays"]
@@ -119,11 +120,12 @@ def latest_step(directory: str) -> int | None:
     for s in reversed(all_steps(directory)):
         if _is_complete(directory, s):
             return s
-        warnings.warn(
+        obs_log.warn(
+            "ckpt_corrupt_step",
             f"checkpoint step {s} in {directory} is corrupt or incomplete "
             "(unparseable MANIFEST.json or missing host shard); falling "
-            "back to the previous complete step", RuntimeWarning,
-            stacklevel=2)
+            "back to the previous complete step", category=RuntimeWarning,
+            stacklevel=3, step=int(s), directory=directory)
     return None
 
 
@@ -169,18 +171,23 @@ def restore_latest(directory: str, template, *, host: int = 0):
     restored tree, or None when no step could be restored."""
     for s in reversed(all_steps(directory)):
         if not _is_complete(directory, s):
-            warnings.warn(
+            obs_log.warn(
+                "ckpt_corrupt_step",
                 f"checkpoint step {s} in {directory} is corrupt or "
-                "incomplete; trying the previous step", RuntimeWarning,
-                stacklevel=2)
+                "incomplete; trying the previous step",
+                category=RuntimeWarning, stacklevel=3,
+                step=int(s), directory=directory)
             continue
         try:
             return restore(directory, s, template, host=host)
         except _CORRUPT_ERRORS as e:
             # includes the GC race: _is_complete saw the step, the rmtree
             # landed before np.load — FileNotFoundError is an OSError
-            warnings.warn(
+            obs_log.warn(
+                "ckpt_load_failed",
                 f"checkpoint step {s} in {directory} failed to load "
                 f"({type(e).__name__}: {e}); trying the previous step",
-                RuntimeWarning, stacklevel=2)
+                category=RuntimeWarning, stacklevel=3,
+                step=int(s), directory=directory,
+                error=type(e).__name__)
     return None

@@ -63,6 +63,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -70,6 +71,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graphs.structure import Graph
+from ..obs import convergence as obs_convergence
+from ..obs import log as obs_log
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .activity import Activity
 from .operators import HostOperators, PsiOperators
 from .power_psi import _NORMS, PsiResult
@@ -131,6 +136,45 @@ class EngineState:
 # --------------------------------------------------------------------- #
 # Protocol + registry
 # --------------------------------------------------------------------- #
+def _instrument_run(run):
+    """Wrap a backend's ``run`` with the telemetry plane (repro.obs).
+
+    Applied automatically by :meth:`PsiEngine.__init_subclass__` to every
+    backend that defines its own ``run`` — one instrumentation point for
+    all current and future backends, including out-of-package ones like
+    ``repro.localpush``. When every obs sink is null the wrapper is one
+    boolean check and a tail call; otherwise it opens an ``engine.run``
+    span + a convergence record around the resolve. Instrumentation only
+    *reads* the result (and syncs it, which the drivers did anyway), so
+    the returned ψ/s are bitwise identical either way.
+    """
+
+    @functools.wraps(run)
+    def wrapped(self, *args, **kwargs):
+        tracker = obs_convergence.get_tracker()
+        tracer = obs_trace.get_tracer()
+        if not (tracker.enabled or tracer.enabled or obs_metrics.enabled()):
+            return run(self, *args, **kwargs)
+        rec = tracker.begin(self.name,
+                            tenant=getattr(self, "obs_tenant", None))
+        with obs_trace.span("engine.run", backend=self.name) as sp:
+            try:
+                res = run(self, *args, **kwargs)
+            except BaseException:
+                tracker.finish(rec, converged=False,
+                               duration_s=sp.duration_s)
+                raise
+            sp.sync(res.s)
+        tracker.finish(rec, iterations=int(res.iterations),
+                       gap=float(res.gap), converged=bool(res.converged),
+                       duration_s=sp.duration_s,
+                       psi_error_bound=self.psi_error_bound())
+        return res
+
+    wrapped._obs_instrumented = True
+    return wrapped
+
+
 class PsiEngine(abc.ABC):
     """One (graph, activity) pair's solver; see module docstring.
 
@@ -148,6 +192,12 @@ class PsiEngine(abc.ABC):
     """
 
     name: str = "abstract"
+
+    def __init_subclass__(cls, **kw):
+        super().__init_subclass__(**kw)
+        run = cls.__dict__.get("run")
+        if run is not None and not getattr(run, "_obs_instrumented", False):
+            cls.run = _instrument_run(run)
 
     def __init__(self, *, dtype=jnp.float32,
                  criterion: ConvergenceCriterion | None = None,
@@ -233,10 +283,13 @@ class PsiEngine(abc.ABC):
         :func:`make_batched_loop`."""
         self.one_step = one_step
         if self.accelerate:
-            self._loop = _make_accelerated_loop(
+            loop = _make_accelerated_loop(
                 one_step, extrapolate_every=self.extrapolate_every)
         else:
-            self._loop = _make_loop(one_step, check_every=self.check_every)
+            loop = _make_loop(one_step, check_every=self.check_every)
+        # count silent recompiles of the solver loop (e.g. the shape change
+        # of a format rebuild after a patch_edges overflow)
+        self._loop = obs_trace.retrace_guard(loop, name=f"{self.name}.loop")
         self._step_jit = jax.jit(one_step)
 
     def _scale(self) -> jax.Array:
@@ -607,6 +660,7 @@ class ChunkExtrapolator:
             return s_out
         if gap >= self._gap_prev:             # jump/stall did not help
             self.enabled = False
+            obs_convergence.record_aitken(False)
             return s_out
         self._gap_prev = gap
         dn = float(jnp.sum(jnp.abs(s_out - s_in)))
@@ -614,6 +668,7 @@ class ChunkExtrapolator:
         self._prev_dn = dn
         if 0.0 < r < 0.999 and gap > self.guard * self.tol:
             self.jumps += 1
+            obs_convergence.record_aitken(True)
             return s_out + (s_out - s_in) * (r / (1.0 - r))
         return s_out
 
@@ -1030,7 +1085,10 @@ class DistributedEngine(PsiEngine):
         while it < max_iter and gap > tol:
             s_new, gap_dev = self._run_chunk(s, self.dist.arrays)
             it += self.chunk_iters
-            gap = scale * float(gap_dev)
+            raw = float(gap_dev)
+            gap = scale * raw
+            # the host already read this gap — record it, free of syncs
+            obs_convergence.record_gap(it, raw=raw, certified=gap)
             s = extrap.advance(s, s_new, gap) if extrap else s_new
         psi_piece = self._epi(s, self.dist.arrays)
         psi = part.from_src_layout(
@@ -1089,12 +1147,15 @@ class DistributedEngine(PsiEngine):
             required = int(need[r_o, c_o])
             if self.on_overflow == "raise":
                 raise BlockOverflowError((r_o, c_o), int(p.e_max), required)
-            import warnings
-            warnings.warn(
+            # structured + counted (obs_events_total{event=block_overflow_
+            # regrow}) AND still a RuntimeWarning, exactly as before
+            obs_log.warn(
+                "block_overflow_regrow",
                 f"distributed patch_edges: block (row={r_o}, col={c_o}) "
                 f"overflows e_max={int(p.e_max)} (insert requires capacity "
                 f">= {required}); regrowing the partition from the patched "
-                f"graph", RuntimeWarning, stacklevel=2)
+                f"graph", category=RuntimeWarning,
+                row=r_o, col=c_o, e_max=int(p.e_max), required=required)
             # commit the edges to the host mirror, then repartition once at
             # the grown e_max (one retrace, no second data path)
             self.host.insert_filtered(src_k, dst_k)

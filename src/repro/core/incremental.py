@@ -26,6 +26,8 @@ from __future__ import annotations
 import numpy as np
 
 from ..graphs.structure import Graph
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .activity import Activity
 from .engine import PsiEngine, make_engine
 from .operators import _validate_rates
@@ -111,23 +113,53 @@ class RankedQueries:
     query site.
     """
 
+    def _obs_cache_state(self) -> str:
+        """'hit' when this read will be served from a memoized ranking,
+        'miss' when it must (re)build one. Overridable by subclasses whose
+        cache lives elsewhere (the fleet's per-lane views)."""
+        return "hit" if getattr(self, "_cache", None) is not None else "miss"
+
+    def _read(self, op: str, fn):
+        """Every public read funnels through here: latency histogram
+        (``psi_query_seconds{op=}``), cache hit ratio, staleness-at-read
+        counter, and a ``query`` span — all skipped in one branch when the
+        telemetry plane is dark."""
+        reg = obs_metrics.get_registry()
+        if getattr(reg, "null", False) and not obs_trace.get_tracer().enabled:
+            return fn(self._query())
+        state = self._obs_cache_state()
+        stale = bool(getattr(self, "stale", False))
+        with obs_trace.span("query", op=op, cache=state) as sp:
+            out = fn(self._query())
+        reg.histogram("psi_query_seconds",
+                      "read-side ψ query latency (seconds)",
+                      labelnames=("op",)).labels(op=op).observe(sp.duration_s)
+        reg.counter("psi_query_cache_total",
+                    "ranking-cache outcome at read time",
+                    labelnames=("result",)).labels(result=state).inc()
+        if stale:
+            reg.counter("psi_query_stale_reads_total",
+                        "reads served from a fixed point with deferred "
+                        "patches pending").inc()
+        return out
+
     def scores(self) -> np.ndarray:
-        return self._query().psi
+        return self._read("scores", lambda c: c.psi)
 
     def scores_batch(self, users: np.ndarray) -> np.ndarray:
         """ψ for a batch of users (no ranking sort paid)."""
-        return self._query().scores_batch(users)
+        return self._read("scores_batch", lambda c: c.scores_batch(users))
 
     def top_k(self, k: int) -> tuple[np.ndarray, np.ndarray]:
-        return self._query().top_k(k)
+        return self._read("top_k", lambda c: c.top_k(k))
 
     def top_k_certified(self, k: int):
         """Top-k plus its rank-stability certificate (see
         :meth:`RankingCache.top_k_certified`)."""
-        return self._query().top_k_certified(k)
+        return self._read("top_k_certified", lambda c: c.top_k_certified(k))
 
     def rank_of(self, users: np.ndarray) -> np.ndarray:
-        return self._query().rank_of(users)
+        return self._read("rank_of", lambda c: c.rank_of(users))
 
 
 class PsiService(RankedQueries):
@@ -290,15 +322,21 @@ class PsiService(RankedQueries):
         """
         if ((self._pending or self._last is None)
                 and hasattr(self._engine, "run_top_k")):
-            prev_s = None if self._last is None else self._last.s
-            self._last, cert = self._engine.run_top_k(
-                k, tol=self.tol, max_iter=self.max_iter, s0=prev_s)
-            self._cache = RankingCache(
-                self._last.psi, err_bound=self._engine.psi_error_bound())
-            self._pending = False
-            self._early = not bool(self._last.converged)
+            with obs_trace.span("query", op="top_k_certified",
+                                cache="early_stop") as sp:
+                prev_s = None if self._last is None else self._last.s
+                self._last, cert = self._engine.run_top_k(
+                    k, tol=self.tol, max_iter=self.max_iter, s0=prev_s)
+                self._cache = RankingCache(
+                    self._last.psi, err_bound=self._engine.psi_error_bound())
+                self._pending = False
+                self._early = not bool(self._last.converged)
+            obs_metrics.histogram(
+                "psi_query_seconds", "read-side ψ query latency (seconds)",
+                labelnames=("op",)) \
+                .labels(op="top_k_certified").observe(sp.duration_s)
             return cert
-        return self._query().top_k_certified(k)
+        return RankedQueries.top_k_certified(self, k)
 
     # -- internals ------------------------------------------------------ #
     def _patched_activity(self, users, lam, mu) -> Activity:

@@ -3,6 +3,17 @@
     PYTHONPATH=src python -m repro.launch.serve --arch psi-score --requests 4
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --requests 2 --gen-len 8
+
+Observability (docs/OBSERVABILITY.md): ``--metrics-port`` exposes the live
+registry over HTTP, ``--trace-out`` records every pipeline span to JSONL,
+``--metrics-dump`` writes one self-describing snapshot (fingerprint +
+metrics + convergence trajectories) at exit. The chaos-stream drill —
+``--stream burst --chaos`` — runs streaming ingestion then the fault drill
+under one registry:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch psi-score \
+        --stream burst --chaos --metrics-dump metrics.json \
+        --trace-out trace.jsonl
 """
 from __future__ import annotations
 
@@ -135,6 +146,18 @@ def _serve_stream(args) -> None:
           f"certified(max_events=0)={rep.certify(max_events=0)}")
     top, vals = ing.top_k(args.top_k)
     print(f"[serve] top-{args.top_k}: {top.tolist()}")
+    # batched query traffic against the resolved service (populates the
+    # psi_query_seconds / cache-hit telemetry the obs epilogue summarizes)
+    rng = np.random.default_rng(1)
+    t0 = time.perf_counter()
+    for _ in range(args.requests):
+        users = rng.integers(0, n, args.batch)
+        svc.scores_batch(users)
+        svc.rank_of(users)
+        svc.top_k(args.top_k)
+    print(f"[serve] {args.requests} query rounds (batch {args.batch} + "
+          f"rank + top-{args.top_k}) in "
+          f"{(time.perf_counter() - t0) * 1e3:.1f} ms")
     # parity + estimation quality vs the generator's ground truth
     batch = make_engine("reference", graph=svc.graph,
                         activity=svc.engine.activity,
@@ -236,6 +259,83 @@ def _serve_driver(args) -> None:
               f"({(time.perf_counter() - t0) * 1e3:.1f} ms)")
 
 
+def _obs_epilogue(args) -> None:
+    """When any obs flag was given: print the human summary the acceptance
+    drill asks for (query p50/p99, events/s, cache hit ratio, gap
+    trajectory, retraces, MTTR) and write the registry dump + trace file."""
+    if not (args.metrics_port or args.metrics_dump or args.trace_out):
+        return
+    from .. import obs
+    from ..obs import convergence as obs_convergence
+    from ..obs import metrics as obs_metrics
+    from ..obs import trace as obs_trace
+
+    reg = obs_metrics.get_registry()
+
+    def pooled(name):
+        fam = reg.get(name)
+        if fam is None or getattr(fam, "kind", "") != "histogram":
+            return None
+        m = fam.merged()
+        return m if m.count else None
+
+    def total(name):
+        fam = reg.get(name)
+        return (sum(ch.value for _, ch in fam.children())
+                if fam is not None else 0.0)
+
+    q = pooled("psi_query_seconds")
+    if q is not None:
+        print(f"[obs] query latency: p50={q.quantile(0.5) * 1e3:.2f} ms "
+              f"p99={q.quantile(0.99) * 1e3:.2f} ms over {q.count} queries")
+    evs = reg.value("psi_stream_ingest_events_per_s")
+    if evs:
+        print(f"[obs] stream ingest: {evs:.0f} ev/s "
+              f"({int(total('psi_stream_events_total'))} events, "
+              f"{int(total('psi_stream_resolves_total'))} resolves)")
+    cache = reg.get("psi_query_cache_total")
+    if cache is not None:
+        tot = sum(ch.value for _, ch in cache.children())
+        hits = reg.value("psi_query_cache_total", result="hit") or 0.0
+        if tot:
+            print(f"[obs] query cache: hit ratio {hits / tot:.1%} "
+                  f"({int(hits)}/{int(tot)})")
+    tracker = obs_convergence.get_tracker()
+    for tenant in tracker.tenants():
+        recs = tracker.series(tenant)
+        if not recs:
+            continue
+        last = recs[-1]
+        pts = sum(len(r.points) for r in recs)
+        tag = "" if tenant == "_default" else f" tenant={tenant}"
+        print(f"[obs] convergence{tag}: {len(recs)} resolves, "
+              f"{pts} gap-trajectory points; last [{last.backend}] "
+              f"{last.iterations} iters gap={last.gap:.2e}")
+    retraces = total("psi_retraces_total")
+    print(f"[obs] silent jit retraces: {int(retraces)}")
+    mttr = pooled("psi_resilience_mttr_seconds")
+    if mttr is not None:
+        print(f"[obs] resilience: {mttr.count} recoveries, "
+              f"mttr mean={mttr.sum / mttr.count * 1e3:.0f} ms "
+              f"p99={mttr.quantile(0.99) * 1e3:.0f} ms; "
+              f"{int(total('psi_resilience_degraded_served_total'))} "
+              f"degraded answers")
+    if args.metrics_dump:
+        obs.dump(args.metrics_dump)
+        print(f"[obs] registry dump -> {args.metrics_dump}")
+    tracer = obs_trace.get_tracer()
+    if getattr(tracer, "enabled", False) and args.trace_out:
+        tracer.flush()
+        chrome = args.trace_out + ".chrome.json"
+        tracer.export_chrome(chrome)
+        print(f"[obs] trace -> {args.trace_out} "
+              f"({len(tracer.spans)} spans retained, "
+              f"{tracer.dropped} dropped); chrome view -> {chrome}")
+    if args.metrics_port:
+        print(f"[obs] /metrics still live on port {args.metrics_port} "
+              "until the process exits")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -298,7 +398,27 @@ def main() -> None:
                          "ResilienceReport (docs/RESILIENCE.md)")
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help="seed of the FaultPlan the drill injects")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="expose the live metrics registry over HTTP "
+                         "(/metrics Prometheus text, /metrics.json) on "
+                         "this localhost port")
+    ap.add_argument("--metrics-dump", default=None,
+                    help="write one obs snapshot (environment fingerprint "
+                         "+ metrics + convergence trajectories + recent "
+                         "events) to this JSON path at exit")
+    ap.add_argument("--trace-out", default=None,
+                    help="record every pipeline span to this JSONL path "
+                         "(+ a .chrome.json trace_event export at exit)")
     args = ap.parse_args()
+
+    if args.trace_out or args.metrics_port:
+        from .. import obs
+        if args.trace_out:
+            obs.configure(trace_out=args.trace_out)
+        if args.metrics_port:
+            obs.start_http_server(args.metrics_port)
+            print(f"[obs] metrics on "
+                  f"http://127.0.0.1:{args.metrics_port}/metrics")
 
     import jax
     import jax.numpy as jnp
@@ -307,20 +427,24 @@ def main() -> None:
     entry = get_arch(args.arch)
     mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
 
-    if entry.family == "psi" and args.chaos:
-        _serve_chaos(args)
-        return
-
-    if entry.family == "psi" and args.stream:
-        _serve_stream(args)
+    if entry.family == "psi" and (args.chaos or args.stream):
+        # --stream X --chaos is the combined drill: streaming ingestion
+        # and the fault ladder feed one registry, dumped once at the end
+        if args.stream:
+            _serve_stream(args)
+        if args.chaos:
+            _serve_chaos(args)
+        _obs_epilogue(args)
         return
 
     if entry.family == "psi" and args.executor:
         _serve_driver(args)
+        _obs_epilogue(args)
         return
 
     if entry.family == "psi" and args.tenants > 1:
         _serve_fleet(args)
+        _obs_epilogue(args)
         return
 
     if entry.family == "psi":
@@ -364,6 +488,7 @@ def main() -> None:
                 print(f"[serve] delta update user {u}: re-converged in "
                       f"{svc.last_iterations()} warm iterations "
                       f"({(time.perf_counter() - t0) * 1e3:.1f} ms)")
+        _obs_epilogue(args)
         return
 
     if entry.family == "lm":

@@ -42,6 +42,7 @@ from ..core.activity import Activity
 from ..core.engine import EngineState, PsiEngine, register_backend
 from ..graphs.structure import Graph
 from ..core.power_psi import PsiResult
+from ..obs import convergence as obs_convergence
 from . import push, warm
 from .topk import TopKCertificate, certify_top_k
 
@@ -241,6 +242,7 @@ class PushEngine(PsiEngine):
             reseed_matvecs=extra_mv, nodes_touched=int(touched.sum()),
             touched_frac=float(touched.mean()) if host.n else 0.0,
             certified=bool(cert.certified) if cert is not None else None)
+        obs_convergence.record_push(edge_work=ew, cert_edge_work=cew)
         return res, cert
 
     # -- jitted frontier phase ------------------------------------------ #

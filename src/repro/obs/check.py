@@ -1,0 +1,183 @@
+"""``python -m repro.obs.check`` — end-to-end self-test of the telemetry
+plane, runnable anywhere the repo imports (CI runs it as a smoke step and
+uploads the artifacts it writes).
+
+What it exercises, against a real streamed ψ resolve (powerlaw graph →
+poisson event log → online rate estimation → PsiService queries):
+
+1. **accounting** — every ingested event is counted exactly once
+   (``psi_stream_events_total`` == len(log)), at least one resolve ran,
+   and the resolve/convergence records agree with the metrics registry.
+2. **latency plumbing** — the query histogram is populated and internally
+   consistent (p50 ≤ p99 ≤ max).
+3. **tracing** — the JSONL trace parses line by line, contains nested
+   ``engine.run`` spans, and exports a loadable Chrome trace_event file.
+4. **exposition** — the Prometheus text renders with HELP/TYPE headers
+   and histogram bucket monotonicity; the JSON dump round-trips.
+5. **parity** — the same workload re-run under ``obs.disable()`` produces
+   a bitwise-identical ψ vector: instrumentation only ever reads.
+
+Exit status is non-zero on the first failed check. Artifacts land in
+``--out-dir``: ``metrics.prom``, ``metrics.json`` (the full obs dump),
+``trace.jsonl``, ``trace.chrome.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from .. import obs
+
+
+def _build_and_stream(events: int, seed: int = 7):
+    """One small streamed resolve; returns (service, ingestor, log)."""
+    import jax.numpy as jnp
+
+    from ..core import Activity, PsiService, RATE_FLOOR, heterogeneous
+    from ..graphs import powerlaw_configuration
+    from ..stream import FreshnessPolicy, StreamIngestor, poisson_stream
+
+    n, m = 600, 3_600
+    g = powerlaw_configuration(n, m, seed=seed)
+    truth = heterogeneous(n, seed=seed + 1)
+    horizon = events / float(truth.total.sum())
+    log = poisson_stream(truth, horizon, seed=seed + 2, graph=g)
+    cold = Activity(np.full(n, RATE_FLOOR), np.full(n, RATE_FLOOR))
+    svc = PsiService(g, cold, tol=1e-8, backend="reference",
+                     dtype=jnp.float64)
+    ing = StreamIngestor(svc, half_life=horizon / 2, topk=3,
+                         policy=FreshnessPolicy(coalesce=16,
+                                                resolve_every=250))
+    ing.ingest(log)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        users = rng.integers(0, n, 4)
+        svc.scores_batch(users)
+        svc.rank_of(users)
+        svc.top_k(3)
+    return svc, ing, log
+
+
+def run_check(out_dir: str, *, events: int = 1_200) -> list[str]:
+    """Run every check; returns the list of failure strings (empty = ok)."""
+    os.makedirs(out_dir, exist_ok=True)
+    failures: list[str] = []
+
+    def check(cond: bool, msg: str) -> None:
+        tag = "ok " if cond else "FAIL"
+        print(f"[obs.check] {tag} {msg}")
+        if not cond:
+            failures.append(msg)
+
+    trace_path = os.path.join(out_dir, "trace.jsonl")
+    if os.path.exists(trace_path):
+        os.remove(trace_path)
+    prev = obs.configure(registry=obs.MetricsRegistry(),
+                         tracer=obs.Tracer(trace_path),
+                         tracker=obs.ConvergenceTracker())
+    try:
+        svc, ing, log = _build_and_stream(events)
+        psi_live = np.array(svc.scores(), copy=True)
+
+        reg = obs.metrics.get_registry()
+        # 1. accounting
+        ev_fam = reg.get("psi_stream_events_total")
+        counted = (sum(ch.value for _, ch in ev_fam.children())
+                   if ev_fam else 0)
+        check(counted == len(log),
+              f"event accounting: counted {int(counted)} == {len(log)}")
+        resolves = reg.value("psi_stream_resolves_total") or 0
+        check(resolves >= 1, f"resolves ran: {int(resolves)} >= 1")
+        n_resolves = sum(len(obs.convergence.get_tracker().series(t))
+                         for t in obs.convergence.get_tracker().tenants())
+        check(n_resolves >= 1,
+              f"convergence records: {n_resolves} resolve(s) recorded")
+        rec_total = reg.get("psi_resolves_total")
+        rec_count = (sum(ch.value for _, ch in rec_total.children())
+                     if rec_total else 0)
+        check(rec_count == n_resolves,
+              f"registry/tracker agree: {int(rec_count)} == {n_resolves}")
+
+        # 2. latency plumbing
+        qfam = reg.get("psi_query_seconds")
+        pooled = qfam.merged() if qfam is not None else None
+        check(pooled is not None and pooled.count > 0,
+              "query latency histogram populated")
+        if pooled is not None and pooled.count:
+            p50, p99 = pooled.quantile(0.5), pooled.quantile(0.99)
+            check(0 <= p50 <= p99 <= pooled._max + 1e-12,
+                  f"quantiles ordered: p50={p50:.2e} <= p99={p99:.2e}")
+
+        # 3. tracing
+        tracer = obs.trace.get_tracer()
+        tracer.flush()
+        with open(trace_path) as f:
+            spans = [json.loads(line) for line in f if line.strip()]
+        names = {s["name"] for s in spans}
+        check(len(spans) > 0, f"trace JSONL parses ({len(spans)} spans)")
+        check("engine.run" in names and "stream.resolve" in names,
+              f"expected spans present: {sorted(names)}")
+        depths = [s for s in spans if s.get("parent")]
+        check(len(depths) > 0, "spans nest (parented spans recorded)")
+        chrome = os.path.join(out_dir, "trace.chrome.json")
+        tracer.export_chrome(chrome)
+        with open(chrome) as f:
+            doc = json.load(f)
+        check(bool(doc.get("traceEvents")), "chrome export loads")
+
+        # 4. exposition
+        prom = reg.to_prometheus()
+        check("# TYPE psi_query_seconds histogram" in prom
+              and "# HELP" in prom, "prometheus text has HELP/TYPE headers")
+        buckets = [int(ln.rsplit(" ", 1)[1]) for ln in prom.splitlines()
+                   if ln.startswith("psi_query_seconds_bucket{op=\"top_k\"")]
+        check(buckets == sorted(buckets),
+              "histogram bucket counts are cumulative-monotone")
+        with open(os.path.join(out_dir, "metrics.prom"), "w") as f:
+            f.write(prom)
+        snap = obs.dump(os.path.join(out_dir, "metrics.json"))
+        check(bool(snap["fingerprint"].get("python"))
+              and "psi_resolves_total" in snap["metrics"],
+              "obs dump carries fingerprint + metrics + convergence")
+    finally:
+        obs.restore(prev)
+
+    # 5. parity: the identical workload with every sink nulled
+    prev = obs.disable()
+    try:
+        svc2, _, _ = _build_and_stream(events)
+        psi_null = np.array(svc2.scores(), copy=True)
+    finally:
+        obs.restore(prev)
+    check(psi_live.shape == psi_null.shape
+          and np.array_equal(psi_live, psi_null),
+          "instrumented vs disabled psi bitwise-equal")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="self-test the repro.obs telemetry plane")
+    ap.add_argument("--out-dir", default="obs_check_out",
+                    help="artifact directory (metrics.prom, metrics.json, "
+                         "trace.jsonl, trace.chrome.json)")
+    ap.add_argument("--events", type=int, default=1_200,
+                    help="approximate synthetic stream size")
+    args = ap.parse_args(argv)
+    failures = run_check(args.out_dir, events=args.events)
+    if failures:
+        print(f"[obs.check] {len(failures)} check(s) FAILED:")
+        for msg in failures:
+            print(f"[obs.check]   - {msg}")
+        return 1
+    print(f"[obs.check] all checks passed; artifacts in "
+          f"{os.path.abspath(args.out_dir)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

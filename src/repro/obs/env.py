@@ -1,0 +1,53 @@
+"""Environment fingerprint: make every recorded number interpretable.
+
+A benchmark entry or metrics dump without the jax version, device kind,
+x64 flag, and git SHA that produced it is noise across machines. Every
+field is best-effort (``None`` on failure) so the fingerprint never
+breaks a run.
+"""
+from __future__ import annotations
+
+import datetime
+import os
+import platform
+import subprocess
+
+__all__ = ["environment_fingerprint"]
+
+
+def _git_sha() -> str | None:
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    for cwd in (root, os.getcwd()):
+        try:
+            out = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                cwd=cwd, capture_output=True, text=True, timeout=5)
+            if out.returncode == 0:
+                return out.stdout.strip()
+        except (OSError, subprocess.SubprocessError):
+            pass
+    return None
+
+
+def environment_fingerprint() -> dict:
+    """Everything needed to compare two runs: versions, device, flags,
+    code revision, and a UTC timestamp."""
+    fp: dict = {
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "git_sha": _git_sha(),
+    }
+    try:
+        import jax
+        fp["jax"] = jax.__version__
+        fp["x64"] = bool(jax.config.read("jax_enable_x64"))
+        devs = jax.devices()
+        fp["device_platform"] = devs[0].platform if devs else None
+        fp["device_kind"] = devs[0].device_kind if devs else None
+        fp["device_count"] = len(devs)
+    except Exception as e:                         # pragma: no cover
+        fp["jax_error"] = f"{type(e).__name__}: {e}"
+    return fp

@@ -38,6 +38,9 @@ import time
 import numpy as np
 
 from ..core.incremental import RankingCache
+from ..obs import log as obs_log
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..stream.freshness import FreshnessReport
 from .health import Sentinels, psi_residual_bound
 
@@ -174,6 +177,10 @@ class ResilientResolver:
 
     # -- one supervised resolve ------------------------------------------ #
     def resolve(self, *, warm: bool = True) -> ResolveOutcome:
+        with obs_trace.span("resilience.resolve"):
+            return self._resolve(warm=warm)
+
+    def _resolve(self, *, warm: bool) -> ResolveOutcome:
         attempts = 0
         first_failure: float | None = None
         failures: list[str] = []
@@ -182,6 +189,10 @@ class ResilientResolver:
         for i in range(1 + self.max_retries):
             if i:
                 self.report.retries += 1
+                obs_metrics.counter(
+                    "psi_resilience_retries_total",
+                    "same-configuration resolve retries (ladder rung 1)",
+                ).inc()
                 time.sleep(self.backoff_s * self.backoff_factor ** (i - 1))
             attempts += 1
             try:
@@ -190,11 +201,11 @@ class ResilientResolver:
                                     "none" if not failures else "retry")
             except ResolveFailure as e:
                 failures.append(f"attempt {attempts}: {e}")
-                first_failure = first_failure or time.perf_counter()
+                first_failure = first_failure or obs_trace.now()
 
         # rung 2: rechunk with τ = 0 (barriered — no staleness to certify)
         if self.allow_rechunk:
-            self.report.escalations.append("rechunk")
+            self._note_escalation("rechunk")
             self.driver = self.driver.rechunk(self.driver.num_chunks, tau=0)
             attempts += 1
             try:
@@ -205,7 +216,7 @@ class ResilientResolver:
 
         # rung 3: synchronous sweep (no pool, no staleness, no overlap)
         if self.allow_sync:
-            self.report.escalations.append("sync")
+            self._note_escalation("sync")
             attempts += 1
             try:
                 rep = self._attempt_sync()
@@ -215,6 +226,16 @@ class ResilientResolver:
 
         # rung 4: serve degraded from the last known good fixed point
         return self._degrade(attempts, failures)
+
+    def _note_escalation(self, rung: str) -> None:
+        self.report.escalations.append(rung)
+        obs_metrics.counter(
+            "psi_resilience_escalations_total",
+            "ladder escalations past the retry rung", ["rung"],
+        ).labels(rung=rung).inc()
+        obs_log.event("resolve_escalation",
+                      f"resolve escalated to the {rung} rung",
+                      level="warning", rung=rung)
 
     # -- attempts --------------------------------------------------------- #
     def _attempt_async(self, *, warm: bool):
@@ -269,9 +290,18 @@ class ResilientResolver:
         self._last_good = cache
         self._last_good_wall = time.time()
         if first_failure is not None:
+            # MTTR on the shared span clock: first failure → first accepted
+            # answer (the same measurement ResilienceReport.mttr_s averages)
+            mttr = obs_trace.now() - first_failure
             self.report.recoveries += 1
-            self.report.mttr_samples.append(
-                time.perf_counter() - first_failure)
+            self.report.mttr_samples.append(mttr)
+            obs_metrics.histogram(
+                "psi_resilience_mttr_seconds",
+                "first failure to first accepted answer, per incident",
+            ).observe(mttr)
+            obs_log.event("resolve_recovered",
+                          f"resolve recovered via {escalation} "
+                          f"after {mttr * 1e3:.1f}ms", escalation=escalation)
         return ResolveOutcome(ranking=cache, degraded=False,
                               escalation=escalation, attempts=attempts,
                               psi_error_bound=bound, report=rep)
@@ -281,8 +311,12 @@ class ResilientResolver:
             raise ResolveFailure(
                 "every ladder rung failed and no previous fixed point "
                 "exists to degrade to:\n  " + "\n  ".join(failures))
-        self.report.escalations.append("degraded")
+        self._note_escalation("degraded")
         self.report.degraded_served += 1
+        obs_metrics.counter(
+            "psi_resilience_degraded_served_total",
+            "answers served from the last known good fixed point",
+        ).inc()
         bound = self._last_good.err_bound
         now = time.time()
         if self.freshness_fn is not None:

@@ -26,7 +26,6 @@ chunk barrier with the overlapped bounded-staleness scheduler
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable
 
 import jax
@@ -37,6 +36,9 @@ from ..core.distributed import DistributedPsi
 from ..core.engine import ChunkExtrapolator
 from ..core.incremental import RankingCache
 from ..graphs.partition import partition_2d
+from ..obs import convergence as obs_convergence
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 
 __all__ = ["PsiDriver", "PsiDriverBase", "DriverReport", "SlowChunk"]
 
@@ -95,7 +97,13 @@ class PsiDriverBase:
     def _note_duration(self, idx: int, dt: float) -> bool:
         """Record one chunk duration; returns True (and logs a
         :class:`SlowChunk`) when it exceeded ``deadline_factor`` × the
-        running median."""
+        running median.
+
+        ``dt`` must come off the shared span clock (a
+        :class:`repro.obs.trace.Span` around the chunk) so the
+        :class:`SlowChunk` event, the ``psi_chunk_seconds`` histogram and
+        the trace span all describe one measurement.
+        """
         slow = False
         if self._durations:
             deadline = self.deadline_factor * float(
@@ -105,7 +113,13 @@ class PsiDriverBase:
                 self._slow.append(int(idx))
                 self._slow_events.append(
                     SlowChunk(int(idx), float(dt), float(deadline)))
+                obs_metrics.counter(
+                    "psi_slow_chunks_total",
+                    "chunks exceeding deadline_factor x running median"
+                ).inc()
         self._durations.append(float(dt))
+        obs_metrics.histogram("psi_chunk_seconds",
+                              "driver chunk wall seconds").observe(dt)
         return slow
 
     # -- checkpoints ----------------------------------------------------- #
@@ -168,11 +182,15 @@ class PsiDriver(PsiDriverBase):
         gap = float("inf")
         self._reset_tracking()
         self._ckpt_save(0, dict(s=s, it=np.int64(0)))
+        rec = obs_convergence.begin("driver")
         while it < max_iter and gap > tol:
-            t0 = time.perf_counter()
-            s_new, gap_dev = run_chunk(s, dist.arrays)
-            jax.block_until_ready(s_new)
-            self._note_duration(chunk_idx, time.perf_counter() - t0)
+            # one measurement on the shared span clock: the SlowChunk
+            # deadline check, chunk_durations, and the trace span all see
+            # this span's duration (sync() keeps the block_until_ready)
+            with obs_trace.span("driver.chunk", chunk=chunk_idx) as sp:
+                s_new, gap_dev = run_chunk(s, dist.arrays)
+                sp.sync(s_new)
+            self._note_duration(chunk_idx, sp.duration_s)
 
             if fail_hook is not None and fail_hook(chunk_idx):
                 restarts += 1
@@ -189,15 +207,19 @@ class PsiDriver(PsiDriverBase):
                 continue
 
             gap = float(gap_dev)
+            it += self.chunk_iters
+            obs_convergence.record_gap(it, certified=gap)
             # chunk-level Aitken jump (verified by the next chunk's plain
             # steps — Eq. 19 semantics preserved, see ChunkExtrapolator)
             s = extrap.advance(s, s_new, gap) if extrap else s_new
-            it += self.chunk_iters
             chunk_idx += 1
             self._ckpt_save(it, dict(s=s, it=np.int64(it)))
         psi_piece = epi(s, dist.arrays)
         psi = dist.part.from_src_layout(
             np.asarray(psi_piece).reshape(dist.part.d, -1))
+        obs_convergence.finish(rec, iterations=it, gap=gap,
+                               converged=gap <= tol,
+                               duration_s=float(sum(self._durations)))
         return DriverReport(iterations=it, gap=gap, chunks=chunk_idx,
                             restarts=restarts, slow_chunks=self._slow,
                             psi=psi, chunk_durations=self._durations,

@@ -44,6 +44,9 @@ from typing import Any
 import numpy as np
 
 from ..core.activity import Activity
+from ..obs import convergence as obs_convergence
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..core.engine import (make_batched_loop, make_dense_step,
                            make_edge_tile_step, make_reference_step)
 from ..core.incremental import RankedQueries
@@ -194,7 +197,14 @@ class TenantFleet:
                 t = edge_spmv(s_pre, fmt, interpret=interp)
                 return (lam * t + d) * inv_n
 
-        pair = (make_batched_loop(one_step, check_every=self.check_every),
+        # guard the batched loop: bucket-shape churn that recompiles it is
+        # exactly the silent cost the retrace counter exists to surface.
+        # warn=False — the loop is shared across bucket shapes, so a second
+        # bucket's first compile is expected (still counted, not alerted)
+        pair = (obs_trace.retrace_guard(
+                    make_batched_loop(one_step,
+                                      check_every=self.check_every),
+                    name=f"fleet.{regime}.loop", warn=False),
                 jax.jit(jax.vmap(_epi)))
         self._machinery[regime] = pair
         return pair
@@ -312,6 +322,9 @@ class TenantFleet:
             rec.rebuckets += 1
             rec.epoch += 1
             self._join_bucket(rec)
+            obs_metrics.counter(
+                "psi_fleet_rebuckets_total",
+                "tenants migrated to a larger capacity rung").inc()
         else:
             self._mark_dirty(rec, "edges")
 
@@ -383,13 +396,24 @@ class TenantFleet:
             lanes = bucket.s.shape[0]
             active0 = np.zeros(lanes, bool)
             active0[:len(recs)] = [d or force for d in dirty]
-            s, gap, t = loop(
-                bucket.args, bucket.s, bucket.scale,
-                jnp.asarray(self.tol, self.dtype),
-                jnp.asarray(self.max_iter, jnp.int32), jnp.asarray(active0))
+            with obs_trace.span("fleet.solve", spec=str(spec),
+                                regime=bucket.regime,
+                                lanes=int(active0.sum())) as sp:
+                s, gap, t = loop(
+                    bucket.args, bucket.s, bucket.scale,
+                    jnp.asarray(self.tol, self.dtype),
+                    jnp.asarray(self.max_iter, jnp.int32),
+                    jnp.asarray(active0))
+                sp.sync(s)
             bucket.s = s
+            obs_metrics.gauge(
+                "psi_fleet_lane_occupancy",
+                "admitted lanes / lane capacity of the bucket",
+                labelnames=("spec",)).labels(spec=str(spec)) \
+                .set(len(recs) / max(lanes, 1))
             psi = np.asarray(self._run_epilogue(bucket))
             gap, t = np.asarray(gap), np.asarray(t)
+            tracker = obs_convergence.get_tracker()
             for lane, rec in enumerate(recs):
                 if active0[lane]:
                     # clean lanes keep their stored ψ untouched (their
@@ -399,9 +423,22 @@ class TenantFleet:
                     rec.gap = float(gap[lane])
                     rec.converged = rec.gap <= self.tol
                     ran += 1
+                    if tracker.enabled:
+                        # one endpoint-only record per re-solved tenant —
+                        # the per-tenant convergence time series
+                        tracker.finish(
+                            tracker.begin("fleet", tenant=rec.tid),
+                            iterations=rec.iterations, gap=rec.gap,
+                            converged=rec.converged,
+                            duration_s=sp.duration_s)
                 rec.solved_epoch = rec.epoch
             self.solves += 1
+            obs_metrics.counter("psi_fleet_solves_total",
+                                "batched bucket loop launches").inc()
         self.lane_solves += ran
+        if ran:
+            obs_metrics.counter("psi_fleet_lane_solves_total",
+                                "lanes actually iterated").inc(ran)
         return ran
 
     def psi(self, tenant_id: str) -> np.ndarray:
@@ -742,6 +779,18 @@ class TenantView(RankedQueries):
 
     def last_iterations(self) -> int:
         return self._fleet.last_iterations(self.tenant_id)
+
+    @property
+    def stale(self) -> bool:
+        """True when mutations are pending a fleet solve (the next read
+        triggers it — unlike PsiService, views never serve stale)."""
+        return self._fleet._rec(self.tenant_id).staleness > 0
+
+    def _obs_cache_state(self) -> str:
+        rec = self._fleet._rec(self.tenant_id)
+        entry = self._fleet.frontier._caches.get(self.tenant_id)
+        fresh = entry is not None and entry[0] == rec.solved_epoch
+        return "hit" if fresh and rec.staleness == 0 else "miss"
 
     def _query(self):
         return self._fleet.frontier.ranking(self.tenant_id)

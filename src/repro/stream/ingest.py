@@ -42,6 +42,8 @@ from typing import Iterable, Iterator
 import numpy as np
 
 from ..core.activity import RATE_FLOOR
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .estimator import RateEstimator
 from .events import Follow, Post, Repost, TenantEvent, Unfollow
 from .freshness import FreshnessPolicy, FreshnessReport
@@ -273,6 +275,23 @@ class StreamIngestor:
         self._last_churn: float | None = None
         self._prev_topk: tuple | None = None
         self._source: Iterator | None = None
+        # per-event metric children cached per registry identity: the hot
+        # path then pays one dict hit + one counter inc per event, and a
+        # registry swap (obs.configure / obs.disable) re-resolves lazily
+        self._obs_reg = None
+        self._obs_kind: dict = {}
+
+    def _obs_count_event(self, kind: str) -> None:
+        reg = obs_metrics.get_registry()
+        if reg is not self._obs_reg:
+            fam = reg.counter("psi_stream_events_total",
+                              "ingested events by kind",
+                              labelnames=("kind",))
+            self._obs_kind = {k: fam.labels(kind=k)
+                              for k in ("post", "repost", "follow",
+                                        "unfollow")}
+            self._obs_reg = reg
+        self._obs_kind[kind].inc()
 
     # -- lanes ----------------------------------------------------------- #
     def _lane(self, key) -> _Lane:
@@ -310,10 +329,14 @@ class StreamIngestor:
         self._event_t = max(self._event_t, float(ev.t))
         if isinstance(ev, (Post, Repost)):
             lane.est.observe(ev)
+            self._obs_count_event("repost" if isinstance(ev, Repost)
+                                  else "post")
         elif isinstance(ev, Follow):
             lane.edge_ops[(int(ev.follower), int(ev.leader))] = True
+            self._obs_count_event("follow")
         elif isinstance(ev, Unfollow):
             lane.edge_ops[(int(ev.follower), int(ev.leader))] = False
+            self._obs_count_event("unfollow")
         else:
             raise TypeError(f"unknown event type {type(ev).__name__}")
         lane.buffered += 1
@@ -348,6 +371,12 @@ class StreamIngestor:
         of the same edge) applies *no* patch at all — the serving layers'
         empty-delta fast paths guarantee no cache invalidation.
         """
+        if self._buffered:
+            obs_metrics.histogram(
+                "psi_stream_flush_events",
+                "events coalesced per flush window",
+                buckets=(1, 2, 5, 10, 20, 50, 100, 200, 500, 1000, 5000)
+            ).observe(self._buffered)
         for key, lane in self._lanes.items():
             if lane.buffered == 0 and not lane.edge_ops:
                 continue
@@ -376,7 +405,18 @@ class StreamIngestor:
         """Flush, re-solve ψ on the target, and reset freshness counters
         (records top-k churn against the previous resolve)."""
         self.flush()
-        self._adapter.resolve()
+        # lag at the moment the resolve fires = how far the served ψ had
+        # fallen behind the event-time watermark
+        obs_metrics.gauge(
+            "psi_stream_watermark_lag_seconds",
+            "event-time lag of the served psi when the resolve fired"
+        ).set(self._event_t - self._resolve_t)
+        with obs_trace.span("stream.resolve",
+                            unresolved=self.events_total
+                            - self._resolved_events):
+            self._adapter.resolve()
+        obs_metrics.counter("psi_stream_resolves_total",
+                            "stream-triggered target re-solves").inc()
         self.resolves += 1
         self._resolve_t = self._event_t
         self._resolved_events = self.events_total
@@ -395,13 +435,21 @@ class StreamIngestor:
     def ingest(self, source: Iterable, *, limit: int | None = None,
                resolve_at_end: bool = True) -> FreshnessReport:
         """Replay a source end-to-end under the freshness policy."""
-        for i, ev in enumerate(source):
-            if limit is not None and i >= limit:
-                break
-            self.submit(ev)
-        self.flush()
-        if resolve_at_end:
-            self.resolve()
+        start_events = self.events_total
+        with obs_trace.span("stream.ingest") as sp:
+            for i, ev in enumerate(source):
+                if limit is not None and i >= limit:
+                    break
+                self.submit(ev)
+            self.flush()
+            if resolve_at_end:
+                self.resolve()
+        done = self.events_total - start_events
+        if done and sp.duration_s > 0:
+            obs_metrics.gauge(
+                "psi_stream_ingest_events_per_s",
+                "wall-clock event throughput of the last ingest() replay"
+            ).set(done / sp.duration_s)
         return self.freshness()
 
     # -- persisted offset (crash recovery) -------------------------------- #
@@ -476,6 +524,16 @@ class StreamIngestor:
         # has been ingested on top of the operators it was proved against
         bound = (self._adapter.psi_error_bound()
                  if unresolved == 0 else None)
+        if obs_metrics.enabled():
+            obs_metrics.gauge("psi_stream_dirty_mass",
+                              "applied-but-unresolved l1 rate mass"
+                              ).set(mass)
+            obs_metrics.gauge("psi_stream_dirty_users",
+                              "distinct users awaiting a resolve"
+                              ).set(len(dirty))
+            obs_metrics.gauge("psi_stream_unresolved_events",
+                              "events ingested since the last resolve"
+                              ).set(unresolved)
         return FreshnessReport(
             event_time=self._event_t, resolve_time=self._resolve_t,
             events_total=self.events_total, events_buffered=self._buffered,
