@@ -331,11 +331,13 @@ class AsyncChunkScheduler:
 
     # -- execution -------------------------------------------------------- #
     def _worker(self, k: int, args: ChunkArgs, board: jax.Array,
-                delay: float):
+                delay: float, epoch: int = -1):
         # the span both times the step (shared clock — step_log, the
         # psi_chunk_seconds histogram and the trace agree) and exercises
-        # per-thread span stacks: workers run in the scheduler's pool
-        with obs_trace.span("async.step", chunk=k) as sp:
+        # per-thread span stacks: workers run in the scheduler's pool;
+        # the (chunk, epoch) attrs let the profiler's critical-path walk
+        # name which chunk chain bounds wall-clock
+        with obs_trace.span("async.step", chunk=k, epoch=epoch) as sp:
             if delay and delay > 0:
                 time.sleep(float(delay))
             s_new, gap = self._step(args, board)
@@ -432,7 +434,7 @@ class AsyncChunkScheduler:
                                   else self.board)
                     inflight[k] = (pool.submit(
                         self._worker, k, self.chunked.args[k], board_read,
-                        delay), self._gen)
+                        delay, next_epoch), self._gen)
                 if not inflight:
                     break                             # epoch budget exhausted
                 # bounded wait: a hung worker (fault injection, a wedged

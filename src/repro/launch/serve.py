@@ -5,15 +5,20 @@
         --requests 2 --gen-len 8
 
 Observability (docs/OBSERVABILITY.md): ``--metrics-port`` exposes the live
-registry over HTTP, ``--trace-out`` records every pipeline span to JSONL,
-``--metrics-dump`` writes one self-describing snapshot (fingerprint +
-metrics + convergence trajectories) at exit. The chaos-stream drill —
-``--stream burst --chaos`` — runs streaming ingestion then the fault drill
-under one registry:
+registry over HTTP (now incl. ``/healthz`` + ``/slo``), ``--trace-out``
+records every pipeline span to JSONL, ``--metrics-dump`` writes one
+self-describing snapshot (fingerprint + metrics + convergence
+trajectories) at exit. The analysis layer rides the same flags:
+``--slo`` judges the run against the default SLO catalog (burn-rate
+alerts + verdict epilogue), ``--watch`` arms pre-emptive convergence
+anomaly detection (incl. the seeded α-drift pre-emption scenario in the
+chaos drill), ``--profile-out`` writes flamegraph folded stacks + the
+async critical path. The full drill:
 
     PYTHONPATH=src python -m repro.launch.serve --arch psi-score \
-        --stream burst --chaos --metrics-dump metrics.json \
-        --trace-out trace.jsonl
+        --stream burst --chaos --slo --watch \
+        --metrics-dump metrics.json --trace-out trace.jsonl \
+        --profile-out profile.folded
 """
 from __future__ import annotations
 
@@ -202,6 +207,85 @@ def _serve_chaos(args) -> None:
     print(report.summary())
 
 
+def _serve_watch(args) -> None:
+    """Seeded pre-emption scenario (``--watch``): a deterministic schedule
+    of μ-raising patches marches the contraction modulus α = ‖M‖₁ toward
+    the sentinel wall. The baseline arm shows the α sentinel *would* trip
+    at some patch step; the watched arm's trend projection flags the drift
+    strictly earlier, stops the escalation, and the supervisor consumes
+    the advice as a pre-emptive sync sweep — a certified answer is served
+    and the sentinel never fires (docs/RESILIENCE.md)."""
+    from ..asyncexec import AsyncPsiDriver
+    from ..core import heterogeneous
+    from ..graphs import powerlaw_configuration
+    from ..obs.watch import ConvergenceWatch
+    from ..resilience.health import Sentinels, alpha_norm
+    from ..resilience.supervisor import ResilientResolver
+
+    n, m, wall = 400, 2_400, 0.995
+    factors = [1.35] * 16                      # deterministic μ escalation
+
+    def build():
+        g = powerlaw_configuration(n, m, seed=13)
+        return AsyncPsiDriver(g, heterogeneous(n, seed=14),
+                              num_chunks=3, tau=2)
+
+    def patch(drv, f):
+        users = np.arange(n)
+        drv.host.patch_activity(users, mu=drv.host.mu[users] * f)
+
+    # arm 1 (baseline, no watch): walk the schedule until the sentinel
+    # trips — this is the incident the watch must get ahead of
+    drv = build()
+    sent = Sentinels(alpha_max=wall)
+    trip_step = trip_alpha = None
+    for step, f in enumerate(factors):
+        patch(drv, f)
+        if sent.check_alpha(drv.host) is not None:
+            trip_step, trip_alpha = step, alpha_norm(drv.host)
+            break
+    if trip_step is None:
+        raise SystemExit("[watch] drill broken: the μ schedule never "
+                         "reached the α sentinel wall")
+    print(f"[watch] baseline arm: α sentinel trips at patch {trip_step} "
+          f"(α={trip_alpha:.4f} ≥ {wall})")
+
+    # arm 2 (watched): same schedule, but every patch feeds the watch;
+    # the projected trend flags the drift before the wall and the
+    # supervisor pre-empts with a certified sync sweep
+    drv = build()
+    watch = getattr(args, "_watch", None) or ConvergenceWatch()
+    watch_sent = Sentinels(alpha_max=wall)
+    resolver = ResilientResolver(drv, tol=1e-6, max_iter=4_000,
+                                 attempt_deadline_s=60.0,
+                                 sentinels=watch_sent, watch=watch)
+    watch.consume_advice()        # drop advice left over from earlier phases
+    flag_step = None
+    for step, f in enumerate(factors):
+        patch(drv, f)
+        watch.observe_alpha(alpha_norm(drv.host))
+        if watch.advice().sync_sweep:
+            flag_step = step               # control action: stop escalating
+            break
+    if flag_step is None or flag_step >= trip_step:
+        raise SystemExit(
+            f"[watch] drill FAILED: watch flagged at "
+            f"{flag_step} vs sentinel trip at {trip_step}")
+    out = resolver.resolve()
+    preempted = list(resolver.report.preemptions)
+    trips = [str(t) for t in watch_sent.trips]
+    print(f"[watch] watched arm: α-drift flagged at patch {flag_step} "
+          f"(α={alpha_norm(drv.host):.4f} < {wall}), "
+          f"{trip_step - flag_step} patches ahead of the baseline trip")
+    print(f"[watch] supervisor pre-empted: preemptions={preempted}, "
+          f"escalation={out.escalation!r}, degraded={out.degraded}, "
+          f"err_bound={out.psi_error_bound:.2e}, "
+          f"sentinel trips in watched arm: {trips or 'none'}")
+    if not preempted or trips:
+        raise SystemExit("[watch] drill FAILED: expected a pre-emption "
+                         "and zero sentinel trips in the watched arm")
+
+
 def _serve_driver(args) -> None:
     """Driver-level ψ serving: the fault-tolerant chunk executors — the
     bulk-synchronous ``runtime/psi_driver.py`` or the bounded-staleness
@@ -262,8 +346,11 @@ def _serve_driver(args) -> None:
 def _obs_epilogue(args) -> None:
     """When any obs flag was given: print the human summary the acceptance
     drill asks for (query p50/p99, events/s, cache hit ratio, gap
-    trajectory, retraces, MTTR) and write the registry dump + trace file."""
-    if not (args.metrics_port or args.metrics_dump or args.trace_out):
+    trajectory, retraces, MTTR, SLO verdicts, top hotspots) and write the
+    registry dump + trace file + folded-stacks profile."""
+    if not (args.metrics_port or args.metrics_dump or args.trace_out
+            or getattr(args, "slo", False) or getattr(args, "watch", False)
+            or getattr(args, "profile_out", None)):
         return
     from .. import obs
     from ..obs import convergence as obs_convergence
@@ -320,10 +407,44 @@ def _obs_epilogue(args) -> None:
               f"p99={mttr.quantile(0.99) * 1e3:.0f} ms; "
               f"{int(total('psi_resilience_degraded_served_total'))} "
               f"degraded answers")
+    slo_engine = getattr(args, "_slo_engine", None)
+    if slo_engine is not None:
+        stop = getattr(args, "_slo_stop", None)
+        if stop is not None:
+            stop.set()                      # quiesce the background ticker
+        slo_engine.tick()                   # one final synchronous sample
+        for line in slo_engine.summary():
+            print(f"[slo] {line}")
+    watch = getattr(args, "_watch", None)
+    if watch is not None:
+        ws = watch.summary()
+        print(f"[watch] {ws['signals']} anomaly signal(s): "
+              f"{ws['by_kind'] or '{}'}")
+    tracer = obs_trace.get_tracer()
+    if getattr(tracer, "enabled", False) \
+            and (getattr(args, "profile_out", None)
+                 or getattr(args, "slo", False)):
+        from ..obs.profile import Profile
+        prof = Profile.from_tracer(tracer)
+        if prof.records:
+            print("[profile] top hotspots (self time):")
+            for h in prof.hotspots(5):
+                split = (f" dispatch={h['dispatch_s'] * 1e3:.1f}ms "
+                         f"sync={h['sync_s'] * 1e3:.1f}ms"
+                         if h["dispatch_s"] or h["sync_s"] else "")
+                print(f"[profile]   {h['frame']}: "
+                      f"self={h['self_s'] * 1e3:.1f}ms "
+                      f"total={h['total_s'] * 1e3:.1f}ms "
+                      f"x{h['count']}{split}")
+            cp = prof.critical_path()
+            if cp.steps:
+                print(f"[profile] {cp.describe()}")
+            if getattr(args, "profile_out", None):
+                prof.write_folded(args.profile_out)
+                print(f"[profile] folded stacks -> {args.profile_out}")
     if args.metrics_dump:
         obs.dump(args.metrics_dump)
         print(f"[obs] registry dump -> {args.metrics_dump}")
-    tracer = obs_trace.get_tracer()
     if getattr(tracer, "enabled", False) and args.trace_out:
         tracer.flush()
         chrome = args.trace_out + ".chrome.json"
@@ -332,8 +453,8 @@ def _obs_epilogue(args) -> None:
               f"({len(tracer.spans)} spans retained, "
               f"{tracer.dropped} dropped); chrome view -> {chrome}")
     if args.metrics_port:
-        print(f"[obs] /metrics still live on port {args.metrics_port} "
-              "until the process exits")
+        print(f"[obs] /metrics, /metrics.json, /healthz and /slo still "
+              f"live on port {args.metrics_port} until the process exits")
 
 
 def main() -> None:
@@ -409,16 +530,57 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None,
                     help="record every pipeline span to this JSONL path "
                          "(+ a .chrome.json trace_event export at exit)")
+    ap.add_argument("--slo", action="store_true",
+                    help="judge the run against the default SLO catalog "
+                         "(query p99, freshness, certified error, "
+                         "degraded ratio): background burn-rate ticker, "
+                         "verdict epilogue, /slo endpoint")
+    ap.add_argument("--watch", action="store_true",
+                    help="arm pre-emptive convergence anomaly detection "
+                         "(repro.obs.watch); with --chaos also runs the "
+                         "seeded α-drift pre-emption scenario")
+    ap.add_argument("--profile-out", default=None,
+                    help="write flamegraph folded stacks of the span "
+                         "stream to this path (+ hotspot/critical-path "
+                         "epilogue)")
     args = ap.parse_args()
 
-    if args.trace_out or args.metrics_port:
+    if args.trace_out or args.metrics_port or args.profile_out:
         from .. import obs
         if args.trace_out:
             obs.configure(trace_out=args.trace_out)
+        elif args.profile_out:
+            # profiler needs retained spans; an in-memory tracer suffices
+            obs.configure(tracer=obs.Tracer(None))
         if args.metrics_port:
             obs.start_http_server(args.metrics_port)
             print(f"[obs] metrics on "
-                  f"http://127.0.0.1:{args.metrics_port}/metrics")
+                  f"http://127.0.0.1:{args.metrics_port}/metrics "
+                  "(+ /metrics.json /healthz /slo)")
+    args._slo_engine = None
+    args._slo_stop = None
+    args._watch = None
+    if args.slo:
+        import threading
+        from ..obs.slo import DRILL_TIME_SCALE, SLOEngine, default_slos
+        engine = SLOEngine(default_slos(), time_scale=DRILL_TIME_SCALE)
+        engine.install()                     # /slo endpoint
+        stop = threading.Event()
+
+        def _ticker():
+            while not stop.wait(0.05):
+                engine.tick()
+
+        threading.Thread(target=_ticker, name="slo-ticker",
+                         daemon=True).start()
+        args._slo_engine, args._slo_stop = engine, stop
+        print("[slo] default catalog armed "
+              f"(windows scaled x{DRILL_TIME_SCALE:g} to drill time)")
+    if args.watch:
+        from ..obs.watch import ConvergenceWatch
+        args._watch = ConvergenceWatch()
+        args._watch.attach()                 # digest every finished resolve
+        print("[watch] convergence watch attached to the resolve stream")
 
     import jax
     import jax.numpy as jnp
@@ -434,6 +596,16 @@ def main() -> None:
             _serve_stream(args)
         if args.chaos:
             _serve_chaos(args)
+        if args.watch and args.chaos:
+            _serve_watch(args)
+        if args._slo_engine is not None:
+            # multi-window burn alerts need sustained evidence: give the
+            # ticker a moment to accumulate the slow window post-fault
+            deadline = time.perf_counter() + 5.0
+            while time.perf_counter() < deadline:
+                if args._slo_engine.report()["alerts_total"] >= 1:
+                    break
+                time.sleep(0.1)
         _obs_epilogue(args)
         return
 

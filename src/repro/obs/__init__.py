@@ -8,6 +8,17 @@ Three pillars, one switchboard:
   Chrome ``trace_event`` export, and the jit :func:`retrace_guard`.
 - :mod:`repro.obs.convergence` — per-resolve gap/certificate trajectories.
 
+The analysis-and-control layer on top of the measurements:
+
+- :mod:`repro.obs.slo` — declarative SLOs, error budgets, multi-window
+  burn-rate alerts (served at ``/slo`` on the exposition server).
+- :mod:`repro.obs.profile` — span-stream profiler: folded flamegraph
+  stacks, per-backend cost attribution, async critical-path extraction.
+- :mod:`repro.obs.watch` — online convergence anomaly detection feeding
+  pre-emptive advice into the resilience ladder.
+- :mod:`repro.obs.regress` — noise-aware perf-regression gate over the
+  benchmark trajectory (``python -m repro.obs.regress``).
+
 Instrumentation sites throughout the stack call the cheap module-level
 helpers (``metrics.counter(...)``, ``trace.span(...)``,
 ``convergence.record_gap(...)``); :func:`configure` swaps the process
@@ -22,19 +33,33 @@ from __future__ import annotations
 
 import json as _json
 
-from . import convergence, log, metrics, trace
+from . import convergence, log, metrics, profile, slo, trace, watch
 from .convergence import ConvergenceTracker, NULL_TRACKER
 from .env import environment_fingerprint
 from .metrics import MetricsRegistry, NullRegistry, start_http_server
+from .profile import Profile
+from .slo import SLO, SLOEngine, default_slos
 from .trace import NULL_TRACER, Span, Tracer, retrace_guard, span
+from .watch import ConvergenceWatch
 
 __all__ = [
     "metrics", "trace", "convergence", "log",
+    "slo", "profile", "watch", "regress",
     "MetricsRegistry", "NullRegistry", "Tracer", "Span",
     "ConvergenceTracker", "span", "retrace_guard",
+    "SLO", "SLOEngine", "default_slos", "Profile", "ConvergenceWatch",
     "environment_fingerprint", "start_http_server",
     "configure", "disable", "enabled", "dump",
 ]
+
+
+def __getattr__(name):
+    # lazy: regress is a CLI module; importing it eagerly would trip the
+    # runpy double-import warning under `python -m repro.obs.regress`
+    if name == "regress":
+        from . import regress
+        return regress
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def enabled() -> bool:

@@ -14,12 +14,19 @@ poisson event log → online rate estimation → PsiService queries):
    ``engine.run`` spans, and exports a loadable Chrome trace_event file.
 4. **exposition** — the Prometheus text renders with HELP/TYPE headers
    and histogram bucket monotonicity; the JSON dump round-trips.
-5. **parity** — the same workload re-run under ``obs.disable()`` produces
-   a bitwise-identical ψ vector: instrumentation only ever reads.
+5. **analysis layer** — an :class:`~repro.obs.slo.SLOEngine` ticking over
+   the live registry produces a sane report (and a forced violation
+   counts), the span-stream profiler folds the recorded trace into
+   stacks with positive self time, and the HTTP endpoints
+   (``/healthz``, ``/slo``) answer on an ephemeral port.
+6. **parity** — the same workload re-run under ``obs.disable()`` produces
+   a bitwise-identical ψ vector, and a third run with the FULL analysis
+   layer armed (convergence watch attached, SLO engine ticking, profiler
+   consuming the tracer) is bitwise-identical too: analysis only reads.
 
 Exit status is non-zero on the first failed check. Artifacts land in
 ``--out-dir``: ``metrics.prom``, ``metrics.json`` (the full obs dump),
-``trace.jsonl``, ``trace.chrome.json``.
+``trace.jsonl``, ``trace.chrome.json``, ``profile.folded``.
 """
 from __future__ import annotations
 
@@ -143,10 +150,63 @@ def run_check(out_dir: str, *, events: int = 1_200) -> list[str]:
         check(bool(snap["fingerprint"].get("python"))
               and "psi_resolves_total" in snap["metrics"],
               "obs dump carries fingerprint + metrics + convergence")
+
+        # 5a. SLO engine over the live registry
+        from .slo import SLOEngine, default_slos
+        engine = SLOEngine(default_slos())
+        engine.tick()
+        rep = engine.report()
+        check(len(rep["slos"]) == 4 and rep["alerts_total"] == 0,
+              f"slo engine reports 4 objectives, 0 alerts on a clean run")
+        p99_row = next(s for s in rep["slos"]
+                       if s["name"] == "query_p99_latency")
+        check(p99_row["value"] is not None and p99_row["samples"] >= 1,
+              "slo engine reads the live query-latency signal")
+        from .slo import SLO
+        strict = SLOEngine([SLO("impossible_latency",
+                                lambda: 1.0, target=1e-9,
+                                description="forced violation")])
+        strict.tick()
+        srow = strict.report()["slos"][0]
+        check(srow["bad_samples"] == 1 and not srow["meeting_target"],
+              "forced SLO violation is counted against the budget")
+
+        # 5b. span-stream profiler over the recorded trace
+        from .profile import Profile
+        prof = Profile.from_tracer(obs.trace.get_tracer())
+        folded = prof.folded()
+        check(bool(folded) and all(v >= 0 for v in folded.values())
+              and any("engine.run" in k for k in folded),
+              f"profiler folds {len(folded)} stacks incl. engine.run")
+        hot = prof.hotspots(3)
+        check(bool(hot) and hot[0]["self_s"] > 0,
+              "profiler hotspots carry positive self time")
+        prof.write_folded(os.path.join(out_dir, "profile.folded"))
+
+        # 5c. HTTP endpoints on an ephemeral port
+        import urllib.request
+        from . import metrics as obs_metrics
+        prev_provider = obs_metrics.set_slo_provider(engine.report)
+        server = obs.start_http_server(0)
+        try:
+            port = server.server_address[1]
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/healthz") as r:
+                hz = json.load(r)
+            check(hz.get("status") == "ok" and hz.get("slo_installed"),
+                  "/healthz answers ok with slo installed")
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/slo") as r:
+                sdoc = json.load(r)
+            check(len(sdoc.get("slos", [])) == 4,
+                  "/slo serves the engine report")
+        finally:
+            server.shutdown()
+            obs_metrics.set_slo_provider(prev_provider)
     finally:
         obs.restore(prev)
 
-    # 5. parity: the identical workload with every sink nulled
+    # 6. parity: the identical workload with every sink nulled
     prev = obs.disable()
     try:
         svc2, _, _ = _build_and_stream(events)
@@ -156,6 +216,30 @@ def run_check(out_dir: str, *, events: int = 1_200) -> list[str]:
     check(psi_live.shape == psi_null.shape
           and np.array_equal(psi_live, psi_null),
           "instrumented vs disabled psi bitwise-equal")
+
+    # 6b. parity with the FULL analysis layer armed: watch subscribed to
+    # the tracker, SLO engine ticking, profiler consuming the tracer
+    from .slo import SLOEngine as _Eng, default_slos as _slos
+    from .watch import ConvergenceWatch
+    prev = obs.configure(registry=obs.MetricsRegistry(),
+                         tracer=obs.Tracer(None),
+                         tracker=obs.ConvergenceTracker())
+    watch = ConvergenceWatch()
+    watch.attach()
+    try:
+        eng = _Eng(_slos())
+        svc3, _, _ = _build_and_stream(events)
+        eng.tick()
+        psi_armed = np.array(svc3.scores(), copy=True)
+        prof3 = Profile.from_tracer(obs.trace.get_tracer())
+        check(bool(prof3.records), "analysis-armed run recorded spans")
+        check(watch.summary()["signals"] == 0,
+              "healthy run raises no watch anomalies")
+    finally:
+        watch.detach()
+        obs.restore(prev)
+    check(np.array_equal(psi_live, psi_armed),
+          "psi bitwise-equal with watch+slo+profiler armed")
     return failures
 
 

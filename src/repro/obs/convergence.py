@@ -109,6 +109,21 @@ class ConvergenceTracker:
         self.keep = int(keep)
         self.max_points = int(max_points)
         self._count = 0
+        self._subscribers: list = []
+
+    def subscribe(self, fn):
+        """Call ``fn(record)`` after every finished resolve — the hook
+        :class:`repro.obs.watch.ConvergenceWatch` rides on. Returns
+        ``fn`` so it can be passed back to :meth:`unsubscribe`."""
+        with self._lock:
+            if fn not in self._subscribers:
+                self._subscribers.append(fn)
+        return fn
+
+    def unsubscribe(self, fn) -> None:
+        with self._lock:
+            if fn in self._subscribers:
+                self._subscribers.remove(fn)
 
     def begin(self, backend: str, tenant=None) -> ResolveRecord:
         with self._lock:
@@ -157,6 +172,15 @@ class ConvergenceTracker:
                           "final Eq. 19 gap of the last resolve",
                           labelnames=("backend",)) \
                 .labels(backend=rec.backend).set(rec.gap)
+        with self._lock:
+            subs = list(self._subscribers)
+        for fn in subs:
+            try:
+                fn(rec)
+            except Exception as exc:   # a broken observer must not fail
+                from . import log     # the resolve it observes
+                log.event("convergence_subscriber_error", str(exc),
+                          level="error", backend=rec.backend)
         return rec
 
     def series(self, tenant=None) -> list[ResolveRecord]:
@@ -188,6 +212,12 @@ class _NullTracker:
 
     def finish(self, rec, **kw):
         return rec
+
+    def subscribe(self, fn):
+        return fn
+
+    def unsubscribe(self, fn):
+        pass
 
     def series(self, tenant=None):
         return []

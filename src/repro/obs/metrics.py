@@ -32,10 +32,12 @@ import bisect
 import json
 import math
 import threading
+import time
 
 __all__ = ["MetricsRegistry", "NullRegistry", "NULL_REGISTRY",
            "get_registry", "set_registry", "counter", "gauge", "histogram",
-           "enabled", "start_http_server", "DEFAULT_BUCKETS"]
+           "enabled", "start_http_server", "set_slo_provider",
+           "DEFAULT_BUCKETS"]
 
 #: log-spaced seconds buckets: 10 µs → 60 s (query latencies through
 #: full chaos-drill resolves land inside the measurable range)
@@ -475,9 +477,24 @@ def histogram(name, help="", labelnames=(), buckets=DEFAULT_BUCKETS):
 # --------------------------------------------------------------------- #
 # /metrics over HTTP (serve --metrics-port)
 # --------------------------------------------------------------------- #
+_START_TIME = time.time()
+_SLO_PROVIDER = None
+
+
+def set_slo_provider(fn):
+    """Install the callable the HTTP ``/slo`` endpoint serves (an
+    ``SLOEngine.report``); None uninstalls. Returns the previous one."""
+    global _SLO_PROVIDER
+    prev, _SLO_PROVIDER = _SLO_PROVIDER, fn
+    return prev
+
+
 def start_http_server(port: int, registry=None, host: str = "127.0.0.1"):
-    """Expose ``/metrics`` (Prometheus text) + ``/metrics.json`` on a
-    daemon thread; returns the server (``.shutdown()`` to stop)."""
+    """Expose ``/metrics`` (Prometheus text), ``/metrics.json``,
+    ``/healthz`` (cheap liveness for fleet probes) and ``/slo`` (verdicts
+    of the installed :class:`repro.obs.slo.SLOEngine`) on a daemon
+    thread; returns the server (``.shutdown()`` to stop; pass port 0 for
+    an ephemeral port, read back via ``server.server_address``)."""
     from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
     reg = registry
@@ -490,6 +507,25 @@ def start_http_server(port: int, registry=None, host: str = "127.0.0.1"):
                 ctype = "text/plain; version=0.0.4; charset=utf-8"
             elif self.path == "/metrics.json":
                 body = json.dumps(r.to_json(), indent=1).encode()
+                ctype = "application/json"
+            elif self.path.rstrip("/") == "/healthz":
+                body = json.dumps(dict(
+                    status="ok",
+                    uptime_s=round(time.time() - _START_TIME, 3),
+                    metrics_enabled=not getattr(r, "null", False),
+                    slo_installed=_SLO_PROVIDER is not None)).encode()
+                ctype = "application/json"
+            elif self.path.rstrip("/") == "/slo":
+                if _SLO_PROVIDER is None:
+                    body = json.dumps(
+                        dict(error="no SLO engine installed")).encode()
+                    self.send_response(404)
+                    self.send_header("Content-Type", "application/json")
+                    self.send_header("Content-Length", str(len(body)))
+                    self.end_headers()
+                    self.wfile.write(body)
+                    return
+                body = json.dumps(_SLO_PROVIDER(), indent=1).encode()
                 ctype = "application/json"
             else:
                 self.send_error(404)

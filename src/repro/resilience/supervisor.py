@@ -88,6 +88,7 @@ class ResilienceReport:
     survived: dict = dataclasses.field(default_factory=dict)
     retries: int = 0
     escalations: list = dataclasses.field(default_factory=list)
+    preemptions: list = dataclasses.field(default_factory=list)
     degraded_served: int = 0
     recoveries: int = 0
     mttr_samples: list = dataclasses.field(default_factory=list)
@@ -128,6 +129,7 @@ class ResilienceReport:
                          f"[{mark}]")
         lines.append(f"  retries={self.retries} "
                      f"escalations={self.escalations or '[]'} "
+                     f"preemptions={self.preemptions or '[]'} "
                      f"degraded_served={self.degraded_served} "
                      f"recoveries={self.recoveries} "
                      f"mttr={self.mttr_s * 1e3:.1f}ms")
@@ -151,6 +153,13 @@ class ResilientResolver:
         ``StreamIngestor.freshness``) used to tag degraded answers with
         real stream staleness; without it a wall-clock-staleness report is
         synthesized.
+      watch: optional :class:`~repro.obs.watch.ConvergenceWatch` — its
+        latched advice is consumed at the top of every resolve and can
+        *pre-empt* the ladder: ``tighten_tau`` re-chunks to τ = 0 before
+        the first attempt (ahead of a certificate storm tripping the
+        sentinel), ``sync_sweep`` goes straight to the synchronous rung
+        (ahead of an α-drift / plateau trip). The watch also digests
+        every attempt's driver report and failures, closing the loop.
     """
 
     def __init__(self, driver, *, tol: float = 1e-8, max_iter: int = 2000,
@@ -159,7 +168,7 @@ class ResilientResolver:
                  backoff_factor: float = 2.0, allow_rechunk: bool = True,
                  allow_sync: bool = True,
                  sentinels: Sentinels | None = None,
-                 freshness_fn=None):
+                 freshness_fn=None, watch=None):
         self.driver = driver
         self.tol = float(tol)
         self.max_iter = int(max_iter)
@@ -171,12 +180,16 @@ class ResilientResolver:
         self.allow_sync = allow_sync
         self.sentinels = sentinels or Sentinels()
         self.freshness_fn = freshness_fn
+        self.watch = watch
         self.report = ResilienceReport()
         self._last_good: RankingCache | None = None
         self._last_good_wall: float = time.time()
 
     # -- one supervised resolve ------------------------------------------ #
     def resolve(self, *, warm: bool = True) -> ResolveOutcome:
+        obs_metrics.counter(
+            "psi_resilience_resolves_total",
+            "supervised resolves (degraded-ratio denominator)").inc()
         with obs_trace.span("resilience.resolve"):
             return self._resolve(warm=warm)
 
@@ -184,6 +197,26 @@ class ResilientResolver:
         attempts = 0
         first_failure: float | None = None
         failures: list[str] = []
+
+        # rung 0: pre-emptive action the watch advised before anything
+        # has failed — act while the run is still healthy, not after
+        advice = (self.watch.consume_advice()
+                  if self.watch is not None else None)
+        if advice:
+            if (advice.tighten_tau and self.allow_rechunk
+                    and getattr(self.driver, "tau", 0) > 0):
+                self._note_preemption("rechunk", advice.reasons)
+                self.driver = self.driver.rechunk(
+                    self.driver.num_chunks, tau=0)
+            elif advice.sync_sweep and self.allow_sync:
+                self._note_preemption("sync", advice.reasons)
+                attempts += 1
+                try:
+                    rep = self._attempt_sync()
+                    return self._accept(rep, attempts, None, "none")
+                except ResolveFailure as e:
+                    failures.append(f"preemptive sync: {e}")
+                    first_failure = obs_trace.now()
 
         # rung 1: retry with backoff
         for i in range(1 + self.max_retries):
@@ -237,6 +270,17 @@ class ResilientResolver:
                       f"resolve escalated to the {rung} rung",
                       level="warning", rung=rung)
 
+    def _note_preemption(self, action: str, reasons: tuple) -> None:
+        self.report.preemptions.append(action)
+        obs_metrics.counter(
+            "psi_resilience_preemptions_total",
+            "watch-advised actions taken before any failure", ["action"],
+        ).labels(action=action).inc()
+        obs_log.event("resolve_preempted",
+                      f"watch advice pre-empted the ladder: {action} "
+                      f"(reasons: {', '.join(reasons) or 'unspecified'})",
+                      action=action, reasons=list(reasons))
+
     # -- attempts --------------------------------------------------------- #
     def _attempt_async(self, *, warm: bool):
         sched = self.driver.sched
@@ -251,7 +295,12 @@ class ResilientResolver:
         finally:
             if timer is not None:
                 timer.cancel()
+        if self.watch is not None:
+            self.watch.observe_report(rep)
         if not rep.converged and sched.cancelled:
+            if self.watch is not None:
+                self.watch.observe_failure(
+                    "timeout", f"deadline {self.attempt_deadline_s}s")
             raise AttemptTimeout(
                 f"deadline {self.attempt_deadline_s}s cancelled the "
                 f"scheduler at gap {rep.gap:.3g}")
@@ -289,6 +338,11 @@ class ResilientResolver:
         cache = RankingCache(np.asarray(rep.psi), err_bound=bound)
         self._last_good = cache
         self._last_good_wall = time.time()
+        if bound is not None:
+            obs_metrics.gauge(
+                "psi_certified_error_bound",
+                "Eq. 19 certified sup-norm bound of the last served "
+                "answer").set(bound)
         if first_failure is not None:
             # MTTR on the shared span clock: first failure → first accepted
             # answer (the same measurement ResilienceReport.mttr_s averages)
@@ -318,6 +372,11 @@ class ResilientResolver:
             "answers served from the last known good fixed point",
         ).inc()
         bound = self._last_good.err_bound
+        if bound is not None:
+            obs_metrics.gauge(
+                "psi_certified_error_bound",
+                "Eq. 19 certified sup-norm bound of the last served "
+                "answer").set(bound)
         now = time.time()
         if self.freshness_fn is not None:
             fr = dataclasses.replace(self.freshness_fn(),

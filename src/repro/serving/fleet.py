@@ -282,6 +282,10 @@ class TenantFleet:
             rec.s_host = s0.copy()
         self._tenants[tenant_id] = rec
         self._join_bucket(rec)
+        obs_metrics.gauge(
+            "psi_fleet_tenants",
+            "tenants currently admitted to the fleet"
+        ).set(len(self._tenants))
         return spec
 
     def evict(self, tenant_id: str) -> np.ndarray | None:
@@ -291,6 +295,10 @@ class TenantFleet:
         del self._tenants[tenant_id]
         if self._frontier is not None:
             self._frontier.drop(tenant_id)
+        obs_metrics.gauge(
+            "psi_fleet_tenants",
+            "tenants currently admitted to the fleet"
+        ).set(len(self._tenants))
         return rec.psi
 
     def patch_activity(self, tenant_id: str, users, lam=None,

@@ -534,6 +534,19 @@ class StreamIngestor:
             obs_metrics.gauge("psi_stream_unresolved_events",
                               "events ingested since the last resolve"
                               ).set(unresolved)
+            # keep the freshness SLO's signal live between resolves:
+            # the current lag of the served ψ behind the event watermark
+            obs_metrics.gauge(
+                "psi_stream_watermark_lag_seconds",
+                "event-time lag of the served psi when the resolve fired"
+            ).set(self._event_t - self._resolve_t)
+            # the certified-ψ-error SLO reads this gauge; only a bound
+            # that still covers the served answer is published
+            if bound is not None:
+                obs_metrics.gauge(
+                    "psi_certified_error_bound",
+                    "Eq. 19 certified sup-norm bound of the last served "
+                    "answer").set(bound)
         return FreshnessReport(
             event_time=self._event_t, resolve_time=self._resolve_t,
             events_total=self.events_total, events_buffered=self._buffered,

@@ -1,0 +1,51 @@
+"""Hypothesis property tests for the obs histogram quantile
+interpolation (``repro.obs.metrics``): monotonicity in q, min/max
+tightening at the endpoints, and exactness on degenerate data."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dep; see requirements-dev.txt")
+from hypothesis import given, settings, strategies as st
+
+from repro.obs.metrics import MetricsRegistry
+
+obs_values = st.lists(
+    st.floats(min_value=1e-9, max_value=1e3, allow_nan=False),
+    min_size=1, max_size=64)
+
+
+def _observed(values):
+    reg = MetricsRegistry()
+    h = reg.histogram("q_seconds", "test")
+    for v in values:
+        h.observe(v)
+    return h
+
+
+@given(obs_values, st.floats(min_value=0.0, max_value=1.0),
+       st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=80, deadline=None)
+def test_quantile_monotone_and_bounded(values, q1, q2):
+    h = _observed(values)
+    lo, hi = sorted((q1, q2))
+    a, b = h.quantile(lo), h.quantile(hi)
+    assert a <= b + 1e-12, "quantile must be monotone in q"
+    assert min(values) - 1e-12 <= a and b <= max(values) + 1e-12
+
+
+@given(obs_values)
+@settings(max_examples=80, deadline=None)
+def test_quantile_endpoints_are_exact_min_max(values):
+    h = _observed(values)
+    assert h.quantile(0.0) == min(values)
+    assert h.quantile(1.0) == max(values)
+
+
+@given(st.floats(min_value=1e-9, max_value=1e3, allow_nan=False),
+       st.integers(min_value=1, max_value=32),
+       st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=80, deadline=None)
+def test_quantile_exact_on_degenerate_data(value, count, q):
+    """All observations equal: every quantile is that exact value —
+    min/max tightening must beat bucket-edge interpolation."""
+    h = _observed([value] * count)
+    assert h.quantile(q) == value
