@@ -64,6 +64,7 @@ from __future__ import annotations
 import abc
 import dataclasses
 import functools
+import time
 from typing import Any
 
 import jax
@@ -980,11 +981,20 @@ class AutoEngine(PallasEngine):
     graph *structure*, so ``patch_activity`` / warm re-``prepare`` cycles
     never re-plan, and the compiled solver loop is only rebuilt when the
     plan actually changes.
+
+    Every ``run`` closes the calibration loop: the resolve's measured
+    per-step wall time is fed to :mod:`repro.obs.calibrate` as a
+    (modeled bytes, measured µs) sample for the plan's regime, so
+    model-only planning converges toward this machine's measured
+    rankings (``calibrate=False`` opts out). Feeding is independent of
+    the obs sinks — it is planner input, not telemetry.
     """
 
-    def __init__(self, *, microbench: bool = False, plan_cache=None, **kw):
+    def __init__(self, *, microbench: bool = False, plan_cache=None,
+                 calibrate: bool = True, **kw):
         kw.pop("regime", None)          # the planner owns the regime
         self.microbench = bool(microbench)
+        self.calibrate = bool(calibrate)
         self._plan_cache = plan_cache
         self.plan = None
         super().__init__(**kw)
@@ -995,11 +1005,31 @@ class AutoEngine(PallasEngine):
                  else self._plan_cache)
         plan = autotune.plan_regime(
             graph, microbench=self.microbench, dtype=self.dtype,
-            interpret=self.interpret, cache=cache)
+            interpret=self.interpret, cache=cache,
+            calibration=(None if not self.calibrate else
+                         autotune._USE_GLOBAL))
         if plan != self.plan:
             self.plan = plan
             self._apply_plan(plan)
         return super().prepare(graph, activity)
+
+    def run(self, *, tol=None, max_iter=None, s0=None) -> PsiResult:
+        t0 = time.perf_counter()
+        res = super().run(tol=tol, max_iter=max_iter, s0=s0)
+        wall = time.perf_counter() - t0
+        it = int(res.iterations)
+        # a >3-iteration resolve amortizes compile/dispatch overhead enough
+        # for wall/iter to stand in for the step-span time the model predicts
+        if (self.calibrate and self.plan is not None and it > 3
+                and wall > 0.0 and self.plan.est_bytes > 0.0):
+            from ..obs import calibrate as obs_calibrate
+            obs_calibrate.get_store().observe(
+                self.plan.regime, self.plan.est_bytes, wall / it * 1e6,
+                source="step_span")
+        return res
+    # super().run is already the instrumented PallasEngine.run — marking
+    # this thin timer prevents a second nested span/record per resolve
+    run._obs_instrumented = True
 
 
 # --------------------------------------------------------------------- #

@@ -131,6 +131,9 @@ class RankedQueries:
         stale = bool(getattr(self, "stale", False))
         with obs_trace.span("query", op=op, cache=state) as sp:
             out = fn(self._query())
+        # remembered for explain(): the facts of the most recent read
+        self._last_read = dict(op=op, cache=state, stale=stale,
+                               seconds=sp.duration_s)
         reg.histogram("psi_query_seconds",
                       "read-side ψ query latency (seconds)",
                       labelnames=("op",)).labels(op=op).observe(sp.duration_s)
@@ -160,6 +163,46 @@ class RankedQueries:
 
     def rank_of(self, users: np.ndarray) -> np.ndarray:
         return self._read("rank_of", lambda c: c.rank_of(users))
+
+    def explain(self, *, op: str | None = None) -> str:
+        """EXPLAIN-ANALYZE tree for the last resolve + query.
+
+        Assembles the decision trail recorded by the planner stack
+        (:mod:`repro.obs.explain`) — plan candidates, prunes, cache state,
+        predicted vs measured cost, calibration factors — together with
+        the owning resolve's convergence record, the last read's funnel
+        facts (op, cache, staleness, wall time), and the served
+        certificate bound.  Pure read: rendering never touches the engine
+        state or the device.
+        """
+        from ..obs import calibrate as obs_calibrate
+        from ..obs import convergence as obs_convergence
+        from ..obs import explain as obs_explain
+        g = getattr(self, "graph", None)
+        decisions = obs_explain.decisions_for(
+            n=getattr(g, "n", None), m=getattr(g, "m", None))
+        tenant = getattr(self, "tenant_id", None)
+        tracker = obs_convergence.get_tracker()
+        series = tracker.series(tenant) or (
+            tracker.series(None) if tenant is not None else [])
+        resolve = series[-1] if series else None
+        query = dict(getattr(self, "_last_read", None) or {})
+        if op is not None:
+            query["op"] = op
+        cache = getattr(self, "_cache", None)
+        if cache is not None and cache.err_bound is not None:
+            query.setdefault("err_bound", f"{cache.err_bound:.3g}")
+        query.setdefault("stale", bool(getattr(self, "stale", False)))
+        store = obs_calibrate.get_store()
+        extra = (dict(calibration_env=store.env,
+                      calibration_samples=len(store),
+                      calibration_generation=store.generation)
+                 if len(store) else None)
+        backend = getattr(self, "backend", "?")
+        return obs_explain.explain_tree(
+            header=f"EXPLAIN ANALYZE — power-ψ [backend={backend}]",
+            resolve=resolve, decisions=decisions, query=query or None,
+            extra=extra)
 
 
 class PsiService(RankedQueries):
@@ -199,6 +242,7 @@ class PsiService(RankedQueries):
         self._cache: RankingCache | None = None
         self._pending = False            # deferred patches awaiting resolve
         self._early = False              # last solve stopped at a top-k cert
+        self._dirty = 0                  # patched rows/edges since last solve
 
     @classmethod
     def from_fleet(cls, fleet, tenant_id: str):
@@ -256,6 +300,7 @@ class PsiService(RankedQueries):
         if not self._engine.patch_activity(users, lam=lam, mu=mu):
             self._full_rebuild(activity=self._patched_activity(users, lam, mu))
         self._pending = True
+        self._dirty += int(users.size)
         if resolve:
             self._resolve()
 
@@ -273,6 +318,7 @@ class PsiService(RankedQueries):
                 name=g.name).dedup()
             self._full_rebuild(graph=merged)
         self._pending = True
+        self._dirty += int(src.size)
         if resolve:
             self._resolve()
 
@@ -292,6 +338,7 @@ class PsiService(RankedQueries):
             self._full_rebuild(graph=Graph(g.n, g.src[keep], g.dst[keep],
                                            name=g.name))
         self._pending = True
+        self._dirty += int(src.size)
         if resolve:
             self._resolve()
 
@@ -322,6 +369,7 @@ class PsiService(RankedQueries):
         """
         if ((self._pending or self._last is None)
                 and hasattr(self._engine, "run_top_k")):
+            self._plan_query(k)
             with obs_trace.span("query", op="top_k_certified",
                                 cache="early_stop") as sp:
                 prev_s = None if self._last is None else self._last.s
@@ -330,6 +378,7 @@ class PsiService(RankedQueries):
                 self._cache = RankingCache(
                     self._last.psi, err_bound=self._engine.psi_error_bound())
                 self._pending = False
+                self._dirty = 0
                 self._early = not bool(self._last.converged)
             obs_metrics.histogram(
                 "psi_query_seconds", "read-side ψ query latency (seconds)",
@@ -339,6 +388,27 @@ class PsiService(RankedQueries):
         return RankedQueries.top_k_certified(self, k)
 
     # -- internals ------------------------------------------------------ #
+    def _plan_query(self, k: int | None) -> None:
+        """Record the push-vs-global solver plan for a certified query.
+
+        Advisory: the engine already committed to its backend, so the
+        :func:`~repro.kernels.autotune.choose_solver` verdict only lands
+        in the decision log (``serve --explain`` shows what the planner
+        *would* pick from the measured dirty fraction and k) — pure host
+        arithmetic over counts the service already tracks, no device work
+        and no behaviour change.
+        """
+        host = getattr(self._engine, "host", None)
+        if host is None or host.n <= 0:
+            return
+        import types
+
+        from ..kernels.autotune import choose_solver
+        k = host.n if k is None else max(int(k), 1)  # full resolve ≡ k=n
+        choose_solver(types.SimpleNamespace(n=host.n, m=host.m),
+                      dirty_frac=min(1.0, self._dirty / host.n),
+                      k_frac=min(1.0, k / host.n))
+
     def _patched_activity(self, users, lam, mu) -> Activity:
         act = self._engine.activity
         new_lam, new_mu = act.lam.copy(), act.mu.copy()
@@ -354,11 +424,13 @@ class PsiService(RankedQueries):
                              activity or self._engine.activity)
 
     def _resolve(self) -> None:
+        self._plan_query(None)                    # log the solver verdict
         prev_s = None if self._last is None else self._last.s
         self._last = self._engine.run(tol=self.tol, max_iter=self.max_iter,
                                       s0=prev_s)
         self._cache = None                        # ranking invalidated
         self._pending = False
+        self._dirty = 0
         self._early = False
 
     def _query(self) -> RankingCache:

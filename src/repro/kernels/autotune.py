@@ -39,6 +39,10 @@ import dataclasses
 import numpy as np
 
 from ..graphs.structure import Graph
+from ..obs import calibrate as obs_calibrate
+from ..obs import explain as obs_explain
+from ..obs import log as obs_log
+from ..obs import metrics as obs_metrics
 from .formats import build_bsr, build_edge_tiles
 
 __all__ = ["RegimePlan", "PlanCache", "PLAN_CACHE", "graph_fingerprint",
@@ -85,18 +89,28 @@ class RegimePlan:
     td: int = 128
     est_bytes: float = 0.0    # modeled HBM bytes per step for the winner
     measured_us: float = 0.0  # microbenchmark result (0 when model-only)
+    # what ranked the winner: "model" (raw est_bytes), "microbench"
+    # (measured µs), or "calibrated" (est_bytes × learned factors) —
+    # measured_us == 0.0 alone cannot distinguish model-only from a
+    # genuinely sub-µs bench
+    source: str = "model"
 
     def params(self) -> dict:
         if self.regime == "edge_tile":
             return dict(tile=self.tile, e1=self.e1, e2=self.e2)
         return dict(ts=self.ts, td=self.td)
 
+    def label(self) -> str:
+        kv = ",".join(f"{k}={v}" for k, v in self.params().items())
+        return f"{self.regime}({kv})"
+
 
 # --------------------------------------------------------------------- #
 # Cost model — one O(M) pass per candidate, no format materialization
 # --------------------------------------------------------------------- #
-def estimate_edge_tile_cost(graph: Graph, *, tile: int, e1: int,
-                            e2: int) -> float:
+def estimate_edge_tile_cost(graph: Graph, *, tile: int, e1: int, e2: int,
+                            slot_bytes: float = _EDGE_SLOT_BYTES,
+                            node_bytes: float = _NODE_STREAM_BYTES) -> float:
     """Modeled HBM bytes per fused step under the edge-tile regime."""
     eblk = e1 * e2
     num_tiles = max(1, -(-graph.n // tile))
@@ -104,8 +118,7 @@ def estimate_edge_tile_cost(graph: Graph, *, tile: int, e1: int,
     counts = np.bincount(dst // tile, minlength=num_tiles)
     blocks = np.maximum(1, -(-counts // eblk))
     padded_slots = float(blocks.sum()) * eblk
-    return padded_slots * _EDGE_SLOT_BYTES + \
-        num_tiles * tile * _NODE_STREAM_BYTES
+    return padded_slots * slot_bytes + num_tiles * tile * node_bytes
 
 
 def _bsr_blocks(graph: Graph, ts: int, td: int) -> int:
@@ -130,11 +143,13 @@ def bsr_occupancy(graph: Graph, *, ts: int, td: int) -> float:
     return graph.m / (_bsr_blocks(graph, ts, td) * ts * td)
 
 
-def estimate_bsr_cost(graph: Graph, *, ts: int, td: int) -> float:
+def estimate_bsr_cost(graph: Graph, *, ts: int, td: int,
+                      slot_bytes: float = _BSR_SLOT_BYTES,
+                      node_bytes: float = _NODE_STREAM_BYTES) -> float:
     """Modeled HBM bytes per step under the BSR regime."""
     ndt = max(1, -(-graph.n // td))
-    return float(_bsr_blocks(graph, ts, td)) * ts * td * _BSR_SLOT_BYTES + \
-        ndt * td * _NODE_STREAM_BYTES
+    return float(_bsr_blocks(graph, ts, td)) * ts * td * slot_bytes + \
+        ndt * td * node_bytes
 
 
 # --------------------------------------------------------------------- #
@@ -165,26 +180,46 @@ def bucket_fingerprint(n_pad: int, e_pad: int, *, extra: tuple = ()) -> tuple:
 
 
 class PlanCache:
-    """Process-level memo of :func:`plan_regime` results with hit stats."""
+    """Process-level memo of :func:`plan_regime` results with hit stats.
+
+    Every lookup/store also feeds the obs registry
+    (``psi_plan_cache_{hits,misses}_total``; the process-level default
+    cache additionally publishes ``psi_plan_cache_size``) so cache
+    behaviour is observable in serving, not only assertable in tests.
+    """
 
     def __init__(self):
         self._plans: dict[tuple, RegimePlan] = {}
         self.hits = 0
         self.misses = 0
 
+    def _size_gauge(self) -> None:
+        # only the shared process cache owns the gauge — per-test/private
+        # caches would otherwise fight over one series
+        if self is globals().get("PLAN_CACHE"):
+            obs_metrics.gauge("psi_plan_cache_size",
+                              "memoized plans in the process plan cache") \
+                .set(float(len(self._plans)))
+
     def lookup(self, key: tuple) -> RegimePlan | None:
         plan = self._plans.get(key)
         if plan is not None:
             self.hits += 1
+            obs_metrics.counter("psi_plan_cache_hits_total",
+                                "autotune plan-cache hits").inc()
         return plan
 
     def store(self, key: tuple, plan: RegimePlan) -> None:
         self.misses += 1
+        obs_metrics.counter("psi_plan_cache_misses_total",
+                            "autotune plan-cache misses").inc()
         self._plans[key] = plan
+        self._size_gauge()
 
     def clear(self) -> None:
         self._plans.clear()
         self.hits = self.misses = 0
+        self._size_gauge()
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -225,45 +260,120 @@ def _microbench_step(graph: Graph, plan: RegimePlan, dtype,
     return float(np.median(times) * 1e6)
 
 
+_USE_GLOBAL = object()        # sentinel: "the process calibration store"
+
+
+def _misrank(site: str, model_winner: RegimePlan, best: RegimePlan,
+             ratio: float, basis: str) -> None:
+    """Count one modeled-winner ≠ measured-winner disagreement."""
+    obs_metrics.gauge(
+        "psi_plan_misprediction_ratio",
+        "cost of the raw-model winner over the true winner "
+        "(1.0 = model ranked correctly)").set(float(ratio))
+    if model_winner.regime != best.regime or \
+            model_winner.params() != best.params():
+        obs_log.event("model_misranked",
+                      f"{site}: model picked {model_winner.label()} but "
+                      f"{basis} favors {best.label()} ({ratio:.2f}× dearer)",
+                      level="warning", site=site, basis=basis,
+                      model_winner=model_winner.label(),
+                      winner=best.label(), ratio=float(ratio))
+
+
 def plan_regime(graph: Graph, *, microbench: bool = False,
                 dtype=None, interpret: bool | None = None,
                 edge_tile_candidates=EDGE_TILE_CANDIDATES,
                 bsr_candidates=BSR_CANDIDATES,
-                cache: PlanCache | None = PLAN_CACHE) -> RegimePlan:
+                cache: PlanCache | None = PLAN_CACHE,
+                calibration=_USE_GLOBAL,
+                slot_bytes: tuple | None = None,
+                _ctx: dict | None = None) -> RegimePlan:
     """Choose edge-tile vs BSR (and their parameters) for ``graph``.
 
     The model pass scores every candidate of both regimes; with
     ``microbench=True`` every candidate is then timed once and the
-    measured winner is returned.  Results are memoized in ``cache`` (pass
-    ``cache=None`` to bypass).
+    measured winner is returned.  Model-only picks consult the
+    :mod:`repro.obs.calibrate` store: confident per-regime correction
+    factors turn ``est_bytes`` into calibrated µs before ranking
+    (``calibration=None`` opts out; pass a store to use a private one).
+    ``slot_bytes=(edge, bsr, node)`` overrides the model constants — the
+    calibration self-test injects skewed constants through it.  Results
+    are memoized in ``cache`` (``cache=None`` bypasses); the key includes
+    the calibration generation so a material recalibration replans.
+
+    Every call records a :class:`repro.obs.explain.DecisionRecord` with
+    the full candidate table, the density-gate prunes, and the cache
+    state.
     """
+    ctx = _ctx or {}
+    kind = ctx.get("kind", "regime_plan")
+    site = ctx.get("site", "plan_regime")
+    inputs = dict(n=graph.n, m=graph.m, microbench=bool(microbench))
+    inputs.update(ctx.get("inputs", ()))
+    cal = obs_calibrate.get_store() if calibration is _USE_GLOBAL \
+        else calibration
+    eb, bb, nb = slot_bytes or (_EDGE_SLOT_BYTES, _BSR_SLOT_BYTES,
+                                _NODE_STREAM_BYTES)
+
+    # The calibration key component exists so a *material* recalibration
+    # replans — but only when the store can actually change a ranking:
+    # with no confident factors (or one uniform default) the multipliers
+    # scale every candidate equally, so keying on the raw generation
+    # would spuriously invalidate warm re-prepares (the no-replan/
+    # no-retrace contract of test_engine.py) every time a sample lands.
+    cal_sig = None
+    if cal is not None:
+        m0 = cal.multipliers({"edge_tile", "bsr"})
+        if len(set(m0.values())) > 1:
+            cal_sig = cal.generation
+
     key = None
     if cache is not None:
         key = graph_fingerprint(graph) + (
             bool(microbench), tuple(edge_tile_candidates),
-            tuple(bsr_candidates))
+            tuple(bsr_candidates), cal_sig, slot_bytes)
         hit = cache.lookup(key)
         if hit is not None:
+            obs_explain.record_decision(
+                kind, site, inputs=inputs, cache="hit",
+                chosen=hit.label(), source=hit.source,
+                candidates=[obs_explain.Candidate(
+                    hit.label(), est=hit.est_bytes,
+                    measured_us=hit.measured_us, chosen=True)])
             return hit
 
     # Density gate: drop BSR parameterizations whose tiles would stream
     # mostly zero-fill. Deterministic (structure-only), so it is safe under
     # the cache key above — the same graph always prunes the same set.
-    dense_bsr = [
-        (ts, td) for ts, td in bsr_candidates
-        if bsr_occupancy(graph, ts=ts, td=td) >= BSR_MIN_OCCUPANCY
-    ]
+    dense_bsr, pruned = [], []
+    for ts, td in bsr_candidates:
+        occ = bsr_occupancy(graph, ts=ts, td=td)
+        if occ >= BSR_MIN_OCCUPANCY:
+            dense_bsr.append((ts, td))
+        else:
+            pruned.append(obs_explain.Pruned(
+                f"bsr(ts={ts},td={td})", "BSR_MIN_OCCUPANCY",
+                detail=dict(occupancy=round(occ, 6),
+                            floor=BSR_MIN_OCCUPANCY)))
 
     candidates = [
         RegimePlan(regime="edge_tile", tile=t, e1=a, e2=b,
-                   est_bytes=estimate_edge_tile_cost(graph, tile=t, e1=a,
-                                                     e2=b))
+                   est_bytes=estimate_edge_tile_cost(
+                       graph, tile=t, e1=a, e2=b,
+                       slot_bytes=eb, node_bytes=nb))
         for t, a, b in edge_tile_candidates
     ] + [
         RegimePlan(regime="bsr", ts=ts, td=td,
-                   est_bytes=estimate_bsr_cost(graph, ts=ts, td=td))
+                   est_bytes=estimate_bsr_cost(graph, ts=ts, td=td,
+                                               slot_bytes=bb, node_bytes=nb))
         for ts, td in dense_bsr
     ]
+    model_winner = min(candidates, key=lambda p: p.est_bytes)
+
+    mults = cal.multipliers({p.regime for p in candidates}) \
+        if cal is not None else {}
+    cal_info = None
+    calibrated_us: dict[int, float] = {}
 
     if microbench:
         # measured ground truth: one timed step per candidate — the model
@@ -274,12 +384,45 @@ def plan_regime(graph: Graph, *, microbench: bool = False,
         from .ops import default_interpret
         dtype = dtype or jnp.float32
         interpret = default_interpret() if interpret is None else interpret
-        timed = [dataclasses.replace(
-            p, measured_us=_microbench_step(graph, p, dtype, interpret))
-            for p in candidates]
-        plan = min(timed, key=lambda p: (p.measured_us, p.est_bytes))
+        candidates = [dataclasses.replace(
+            p, measured_us=_microbench_step(graph, p, dtype, interpret),
+            source="microbench") for p in candidates]
+        if cal is not None:
+            for p in candidates:      # feed the loop-closing store
+                cal.observe(p.regime, p.est_bytes, p.measured_us,
+                            source="microbench")
+        plan = min(candidates, key=lambda p: (p.measured_us, p.est_bytes))
+        mw = min(candidates,          # the raw model's pick, now timed
+                 key=lambda p: p.est_bytes)
+        _misrank(site, mw, plan, mw.measured_us / max(plan.measured_us,
+                                                      1e-12),
+                 basis="microbench")
+    elif len(set(mults.get(p.regime, 1.0) for p in candidates)) > 1:
+        # distinct confident factors: rank by calibrated µs, not raw bytes
+        calibrated_us = {i: p.est_bytes * mults[p.regime]
+                         for i, p in enumerate(candidates)}
+        best_i = min(calibrated_us, key=calibrated_us.get)
+        plan = dataclasses.replace(candidates[best_i], source="calibrated")
+        cal_info = dict(env=cal.env, generation=cal.generation,
+                        factors=cal.factors())
+        mw_us = model_winner.est_bytes * mults[model_winner.regime]
+        _misrank(site, model_winner, plan,
+                 mw_us / max(calibrated_us[best_i], 1e-12),
+                 basis="calibration")
     else:
-        plan = min(candidates, key=lambda p: p.est_bytes)
+        plan = model_winner
+
+    obs_explain.record_decision(
+        kind, site, inputs=inputs,
+        cache="miss" if cache is not None else ctx.get("cache", "bypass"),
+        chosen=plan.label(), source=plan.source, calibration=cal_info,
+        candidates=[obs_explain.Candidate(
+            p.label(), est=p.est_bytes, measured_us=p.measured_us,
+            calibrated_us=calibrated_us.get(i),
+            chosen=(p.regime == plan.regime
+                    and p.params() == plan.params()))
+            for i, p in enumerate(candidates)],
+        pruned=pruned)
 
     if cache is not None:
         cache.store(key, plan)
@@ -290,7 +433,8 @@ def plan_for_bucket(graph: Graph, *, n_pad: int, e_pad: int,
                     microbench: bool = False, dtype=None,
                     interpret: bool | None = None,
                     edge_tile_candidates=EDGE_TILE_CANDIDATES,
-                    cache: PlanCache | None = PLAN_CACHE) -> RegimePlan:
+                    cache: PlanCache | None = PLAN_CACHE,
+                    calibration=_USE_GLOBAL) -> RegimePlan:
     """Plan the edge-tile parameters for one fleet bucket shape.
 
     ``graph`` is the member that triggered planning; it is re-padded to the
@@ -310,13 +454,27 @@ def plan_for_bucket(graph: Graph, *, n_pad: int, e_pad: int,
             extra=(bool(microbench), tuple(edge_tile_candidates)))
         hit = cache.lookup(key)
         if hit is not None:
+            obs_explain.record_decision(
+                "bucket_plan", "plan_for_bucket",
+                inputs=dict(n=graph.n, m=graph.m, n_pad=int(n_pad),
+                            e_pad=int(e_pad)),
+                cache="hit", chosen=hit.label(), source=hit.source,
+                candidates=[obs_explain.Candidate(
+                    hit.label(), est=hit.est_bytes,
+                    measured_us=hit.measured_us, chosen=True)])
             return hit
     padded = Graph(int(n_pad), graph.src, graph.dst,
                    name=f"{graph.name}@bucket{n_pad}")
     plan = plan_regime(padded, microbench=microbench, dtype=dtype,
                        interpret=interpret,
                        edge_tile_candidates=edge_tile_candidates,
-                       bsr_candidates=(), cache=None)
+                       bsr_candidates=(), cache=None,
+                       calibration=calibration,
+                       _ctx=dict(kind="bucket_plan", site="plan_for_bucket",
+                                 cache="miss" if cache is not None
+                                 else "bypass",
+                                 inputs=dict(n_pad=int(n_pad),
+                                             e_pad=int(e_pad))))
     if cache is not None:
         cache.store(key, plan)
     return plan
@@ -375,6 +533,20 @@ def choose_solver(graph: Graph, *, dirty_frac: float, k_frac: float = 1.0,
         frontier = min(float(n), frontier * max(1.0, deg))
     global_edges = float(sweeps) * graph.m
     solver = "push" if push_edges < global_edges else "global"
+    obs_explain.record_decision(
+        "solver_choice", "choose_solver",
+        inputs=dict(n=graph.n, m=graph.m, dirty_frac=float(dirty_frac),
+                    k_frac=float(k_frac), sweeps=int(sweeps),
+                    rounds=rounds),
+        chosen=solver, source="model",
+        candidates=[
+            obs_explain.Candidate("push", est=push_edges, unit="edges",
+                                  chosen=solver == "push",
+                                  detail=dict(rounds=rounds)),
+            obs_explain.Candidate("global", est=global_edges, unit="edges",
+                                  chosen=solver == "global",
+                                  detail=dict(sweeps=int(sweeps))),
+        ])
     return SolverChoice(solver=solver, push_edges=push_edges,
                         global_edges=global_edges,
                         dirty_frac=float(dirty_frac),

@@ -130,6 +130,7 @@ def _serve_stream(args) -> None:
     cold = Activity(np.full(n, RATE_FLOOR), np.full(n, RATE_FLOOR))
     svc = PsiService(g, cold, tol=1e-8, backend=backend,
                      check_every=args.check_every, dtype=jnp.float64)
+    args._svc = svc                          # for the --explain epilogue
     half_life = args.half_life if args.half_life else horizon / 2
     ing = StreamIngestor(
         svc, half_life=half_life, topk=args.top_k,
@@ -350,7 +351,9 @@ def _obs_epilogue(args) -> None:
     registry dump + trace file + folded-stacks profile."""
     if not (args.metrics_port or args.metrics_dump or args.trace_out
             or getattr(args, "slo", False) or getattr(args, "watch", False)
-            or getattr(args, "profile_out", None)):
+            or getattr(args, "profile_out", None)
+            or getattr(args, "explain", False)
+            or getattr(args, "explain_out", None)):
         return
     from .. import obs
     from ..obs import convergence as obs_convergence
@@ -442,6 +445,22 @@ def _obs_epilogue(args) -> None:
             if getattr(args, "profile_out", None):
                 prof.write_folded(args.profile_out)
                 print(f"[profile] folded stacks -> {args.profile_out}")
+    if getattr(args, "explain", False) or getattr(args, "explain_out", None):
+        from ..obs import calibrate as obs_calibrate
+        svc = getattr(args, "_svc", None)
+        if svc is None:
+            print("[explain] no PsiService ran in this mode; "
+                  "nothing to explain")
+        else:
+            tree = svc.explain()
+            print(tree)
+            if getattr(args, "explain_out", None):
+                with open(args.explain_out, "w") as fh:
+                    fh.write(tree + "\n")
+                print(f"[explain] decision trail -> {args.explain_out}")
+        if getattr(args, "calibration_out", None):
+            obs_calibrate.get_store().save(args.calibration_out)
+            print(f"[explain] calibration store -> {args.calibration_out}")
     if args.metrics_dump:
         obs.dump(args.metrics_dump)
         print(f"[obs] registry dump -> {args.metrics_dump}")
@@ -543,7 +562,22 @@ def main() -> None:
                     help="write flamegraph folded stacks of the span "
                          "stream to this path (+ hotspot/critical-path "
                          "epilogue)")
+    ap.add_argument("--explain", action="store_true",
+                    help="psi paths: print the EXPLAIN-ANALYZE decision "
+                         "trail for the last resolve — plan chosen, "
+                         "alternatives rejected and why, predicted vs "
+                         "measured cost, cache hits, staleness, certified "
+                         "error (docs/AUTOTUNE.md)")
+    ap.add_argument("--explain-out", default=None,
+                    help="also write the explain tree to this text path "
+                         "(implies --explain)")
+    ap.add_argument("--calibration-out", default=None,
+                    help="persist the cost-model calibration store "
+                         "(per-regime correction factors) to this JSON "
+                         "path at exit")
     args = ap.parse_args()
+    if args.explain_out:
+        args.explain = True
 
     if args.trace_out or args.metrics_port or args.profile_out:
         from .. import obs
@@ -632,6 +666,7 @@ def main() -> None:
                          accelerate=args.accelerate,
                          check_every=args.check_every,
                          engine_opts=engine_opts)
+        args._svc = svc                      # for the --explain epilogue
         regime = getattr(svc.engine, "regime", None)
         print(f"[serve] backend={svc.backend}"
               + (f" regime={regime}" if regime else "")

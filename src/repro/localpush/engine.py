@@ -43,6 +43,7 @@ from ..core.engine import EngineState, PsiEngine, register_backend
 from ..graphs.structure import Graph
 from ..core.power_psi import PsiResult
 from ..obs import convergence as obs_convergence
+from ..obs import explain as obs_explain
 from . import push, warm
 from .topk import TopKCertificate, certify_top_k
 
@@ -243,6 +244,28 @@ class PushEngine(PsiEngine):
             touched_frac=float(touched.mean()) if host.n else 0.0,
             certified=bool(cert.certified) if cert is not None else None)
         obs_convergence.record_push(edge_work=ew, cert_edge_work=cew)
+        if k is not None:
+            # the early-stop outcome belongs in the decision trail: what a
+            # certified exit saved (or failed to save) vs exhausting to tol
+            certified = bool(cert.certified) if cert is not None else False
+            sweeps_eq = float(-(-ew // m))     # edge-work in sweep units
+            obs_explain.record_decision(
+                "early_stop", "PushEngine.run_top_k",
+                inputs=dict(n=host.n, m=host.m, k=int(k), tol=tol),
+                chosen=("certified_early_stop" if certified
+                        else "exhausted_to_tol"),
+                candidates=[
+                    obs_explain.Candidate(
+                        "certified_early_stop", est=float(ew), unit="edges",
+                        chosen=certified,
+                        detail=dict(rounds=rounds,
+                                    sweep_equiv=round(sweeps_eq, 2))),
+                    obs_explain.Candidate(
+                        "exhausted_to_tol", est=None, chosen=not certified,
+                        detail=dict(gap=f"{gap:.3g}")),
+                ],
+                note=f"touched_frac={self.last_run_stats['touched_frac']:.3g}"
+                     f" cert_edge_work={cew}")
         return res, cert
 
     # -- jitted frontier phase ------------------------------------------ #

@@ -33,9 +33,12 @@ from __future__ import annotations
 
 import json as _json
 
-from . import convergence, log, metrics, profile, slo, trace, watch
+from . import calibrate, convergence, explain, log, metrics, profile, slo, \
+    trace, watch
+from .calibrate import CalibrationStore
 from .convergence import ConvergenceTracker, NULL_TRACKER
 from .env import environment_fingerprint
+from .explain import DecisionLog, DecisionRecord, NULL_DECISIONS
 from .metrics import MetricsRegistry, NullRegistry, start_http_server
 from .profile import Profile
 from .slo import SLO, SLOEngine, default_slos
@@ -44,10 +47,11 @@ from .watch import ConvergenceWatch
 
 __all__ = [
     "metrics", "trace", "convergence", "log",
-    "slo", "profile", "watch", "regress",
+    "slo", "profile", "watch", "regress", "explain", "calibrate",
     "MetricsRegistry", "NullRegistry", "Tracer", "Span",
     "ConvergenceTracker", "span", "retrace_guard",
     "SLO", "SLOEngine", "default_slos", "Profile", "ConvergenceWatch",
+    "DecisionLog", "DecisionRecord", "CalibrationStore",
     "environment_fingerprint", "start_http_server",
     "configure", "disable", "enabled", "dump",
 ]
@@ -70,14 +74,16 @@ def enabled() -> bool:
 def configure(*, registry: MetricsRegistry | None = None,
               trace_out: str | None = None,
               tracer: Tracer | None = None,
-              tracker: ConvergenceTracker | None = None) -> dict:
+              tracker: ConvergenceTracker | None = None,
+              decisions: DecisionLog | None = None) -> dict:
     """Install fresh sinks; returns the previous ones (for restoring).
 
     ``trace_out`` is a convenience: a path builds ``Tracer(trace_out)``.
     """
     prev = {"registry": metrics.get_registry(),
             "tracer": trace.get_tracer(),
-            "tracker": convergence.get_tracker()}
+            "tracker": convergence.get_tracker(),
+            "decisions": explain.get_log()}
     if registry is not None:
         metrics.set_registry(registry)
     if tracer is None and trace_out is not None:
@@ -86,14 +92,20 @@ def configure(*, registry: MetricsRegistry | None = None,
         trace.set_tracer(tracer)
     if tracker is not None:
         convergence.set_tracker(tracker)
+    if decisions is not None:
+        explain.set_log(decisions)
     return prev
 
 
 def disable() -> dict:
     """Swap every sink for its null twin (one-branch hot path); returns
-    the previous sinks so callers can restore them."""
+    the previous sinks so callers can restore them.
+
+    The calibration store is *not* a sink: it is a planner input, so the
+    plan chosen with observability disabled matches the instrumented one.
+    """
     return configure(registry=NullRegistry(), tracer=NULL_TRACER,
-                     tracker=NULL_TRACKER)
+                     tracker=NULL_TRACKER, decisions=NULL_DECISIONS)
 
 
 def restore(prev: dict) -> None:
@@ -101,6 +113,8 @@ def restore(prev: dict) -> None:
     metrics.set_registry(prev["registry"])
     trace.set_tracer(prev["tracer"])
     convergence.set_tracker(prev["tracker"])
+    if "decisions" in prev:
+        explain.set_log(prev["decisions"])
 
 
 def dump(path: str | None = None) -> dict:
@@ -112,6 +126,8 @@ def dump(path: str | None = None) -> dict:
         "metrics": metrics.get_registry().to_json(),
         "convergence": convergence.get_tracker().to_json(),
         "events": log.recent(200),
+        "decisions": explain.get_log().to_json(),
+        "calibration": calibrate.get_store().to_json(),
     }
     if path is not None:
         with open(path, "w") as f:

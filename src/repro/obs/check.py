@@ -19,14 +19,29 @@ poisson event log → online rate estimation → PsiService queries):
    counts), the span-stream profiler folds the recorded trace into
    stacks with positive self time, and the HTTP endpoints
    (``/healthz``, ``/slo``) answer on an ephemeral port.
-6. **parity** — the same workload re-run under ``obs.disable()`` produces
-   a bitwise-identical ψ vector, and a third run with the FULL analysis
+6. **decision observability** — :func:`repro.kernels.autotune.plan_regime`
+   records a full :class:`~repro.obs.explain.DecisionRecord` (candidate
+   table, ``BSR_MIN_OCCUPANCY`` prunes, ``PLAN_CACHE`` hit/miss), the
+   plan-cache counters land in the registry, and
+   ``PsiService.explain()`` renders the EXPLAIN-ANALYZE tree.
+7. **calibration loop** — the acceptance drill: skewed cost-model
+   constants (injected via ``slot_bytes``) make the uncalibrated planner
+   mis-rank; a microbench pass feeds the
+   :class:`~repro.obs.calibrate.CalibrationStore`; the calibrated
+   planner then recovers the measured winner, the ``model_misranked``
+   event fires, and ``psi_plan_misprediction_ratio`` is published.
+8. **parity** — the same workload re-run under ``obs.disable()`` (with
+   the decision log nulled and the populated calibration store still
+   armed — calibration is planner input, not telemetry) produces a
+   bitwise-identical ψ vector, and a third run with the FULL analysis
    layer armed (convergence watch attached, SLO engine ticking, profiler
    consuming the tracer) is bitwise-identical too: analysis only reads.
 
 Exit status is non-zero on the first failed check. Artifacts land in
 ``--out-dir``: ``metrics.prom``, ``metrics.json`` (the full obs dump),
-``trace.jsonl``, ``trace.chrome.json``, ``profile.folded``.
+``trace.jsonl``, ``trace.chrome.json``, ``profile.folded``,
+``explain.txt`` (the rendered decision trail), ``calibration.json``
+(the per-regime correction factors).
 """
 from __future__ import annotations
 
@@ -206,18 +221,127 @@ def run_check(out_dir: str, *, events: int = 1_200) -> list[str]:
     finally:
         obs.restore(prev)
 
-    # 6. parity: the identical workload with every sink nulled
+    # 6. decision observability: the planner leaves a complete audit trail
+    from ..graphs import clustered_blocks, powerlaw_configuration
+    from ..kernels import autotune
+    from . import calibrate as obs_calibrate
+    from . import explain as obs_explain
+    from . import log as obs_log
+    prev = obs.configure(registry=obs.MetricsRegistry(),
+                         tracker=obs.ConvergenceTracker(),
+                         decisions=obs.DecisionLog())
+    try:
+        reg = obs.metrics.get_registry()
+        g6 = powerlaw_configuration(500, 3_000, seed=11)
+        cache = autotune.PlanCache()
+        plan1 = autotune.plan_regime(g6, cache=cache, calibration=None)
+        rec = obs_explain.get_log().last(kind="regime_plan")
+        check(rec is not None and rec.cache == "miss"
+              and len(rec.candidates) >= 2 and rec.chosen == plan1.label()
+              and rec.source == "model",
+              "plan_regime miss records the full candidate table")
+        check(bool(rec.pruned)
+              and all(p.reason == "BSR_MIN_OCCUPANCY" for p in rec.pruned),
+              f"density gate prunes carry their reason "
+              f"({len(rec.pruned or ())} pruned)")
+        autotune.plan_regime(g6, cache=cache, calibration=None)
+        rec2 = obs_explain.get_log().last(kind="regime_plan")
+        check(rec2 is not None and rec2.cache == "hit",
+              "plan cache hit is recorded as a decision")
+        hits = reg.value("psi_plan_cache_hits_total") or 0
+        misses = reg.value("psi_plan_cache_misses_total") or 0
+        check(hits >= 1 and misses >= 1,
+              f"plan-cache counters in registry: hits={int(hits)} "
+              f"misses={int(misses)}")
+        dec_n = reg.value("psi_plan_decisions_total", kind="regime_plan")
+        check((dec_n or 0) >= 2,
+              f"psi_plan_decisions_total counts records ({int(dec_n or 0)})")
+
+        # an end-to-end service renders the tree
+        import jax.numpy as jnp
+        from ..core import Activity, PsiService, RATE_FLOOR
+        svc_x = PsiService(
+            g6, Activity(np.full(g6.n, RATE_FLOOR),
+                         np.full(g6.n, RATE_FLOOR)),
+            tol=1e-8, backend="reference", dtype=jnp.float64)
+        svc_x.update_activity(np.asarray([0]), lam=np.asarray([2.0]))
+        svc_x.top_k(3)
+        tree = svc_x.explain()
+        check("EXPLAIN ANALYZE" in tree and "solver_choice" in tree
+              and "resolve" in tree,
+              "PsiService.explain renders the decision trail")
+        with open(os.path.join(out_dir, "explain.txt"), "w") as f:
+            f.write(tree + "\n")
+
+        # 7. calibration loop (the acceptance drill). Skewed constants
+        # make edge_tile look ~free and BSR ruinous; a deterministic
+        # bench plays measured ground truth (BSR actually wins), so the
+        # uncalibrated skewed planner must mis-rank and the calibrated
+        # one must recover.
+        g7 = clustered_blocks(256, 12_000, block=128, p_in=1.0, seed=3)
+        skew = (0.001, 1e5, 16.0)          # (edge, bsr, node) bytes/slot
+        uncal = autotune.plan_regime(g7, cache=None, calibration=None,
+                                     slot_bytes=skew)
+        check(uncal.regime == "edge_tile",
+              f"skewed uncalibrated planner mis-ranks "
+              f"(picked {uncal.regime})")
+        store = obs.CalibrationStore()
+        real_bench = autotune._microbench_step
+        autotune._microbench_step = \
+            lambda graph, plan, dtype, interpret: \
+            100.0 if plan.regime == "bsr" else 5_000.0
+        try:
+            bench = autotune.plan_regime(g7, cache=None, microbench=True,
+                                         calibration=store,
+                                         slot_bytes=skew)
+        finally:
+            autotune._microbench_step = real_bench
+        check(bench.regime == "bsr" and bench.source == "microbench",
+              f"microbench pass finds the measured winner "
+              f"({bench.regime})")
+        check(len(store) >= 2 and bool(store.factors()),
+              f"calibration store fed ({len(store)} samples, "
+              f"factors={sorted(store.factors())})")
+        recovered = autotune.plan_regime(g7, cache=None, calibration=store,
+                                         slot_bytes=skew)
+        check(recovered.regime == bench.regime
+              and recovered.source == "calibrated",
+              f"calibrated planner recovers the measured winner "
+              f"({recovered.regime}, source={recovered.source})")
+        events_mis = obs_log.recent(name="model_misranked")
+        check(len(events_mis) >= 1,
+              f"model_misranked event fired ({len(events_mis)}x)")
+        ratio = reg.value("psi_plan_misprediction_ratio")
+        check(ratio is not None and ratio > 1.0,
+              f"psi_plan_misprediction_ratio published ({ratio:.1f})")
+        store.save(os.path.join(out_dir, "calibration.json"))
+        with open(os.path.join(out_dir, "calibration.json")) as f:
+            cal_doc = json.load(f)
+        check(bool(cal_doc.get("entries"))
+              and {e["regime"] for e in cal_doc["entries"]}
+              >= {"bsr", "edge_tile"},
+              "calibration store round-trips to JSON artifact")
+    finally:
+        obs.restore(prev)
+
+    # 8. parity: the identical workload with every sink nulled — and the
+    # populated calibration store left armed (it is planner input, not
+    # telemetry, so obs.disable() must not touch it and ψ must not move)
+    prev_store = obs_calibrate.get_store()
+    obs_calibrate.set_store(store)
     prev = obs.disable()
     try:
         svc2, _, _ = _build_and_stream(events)
         psi_null = np.array(svc2.scores(), copy=True)
     finally:
         obs.restore(prev)
+        obs_calibrate.set_store(prev_store)
     check(psi_live.shape == psi_null.shape
           and np.array_equal(psi_live, psi_null),
-          "instrumented vs disabled psi bitwise-equal")
+          "instrumented vs disabled psi bitwise-equal "
+          "(explain + calibration armed)")
 
-    # 6b. parity with the FULL analysis layer armed: watch subscribed to
+    # 8b. parity with the FULL analysis layer armed: watch subscribed to
     # the tracker, SLO engine ticking, profiler consuming the tracer
     from .slo import SLOEngine as _Eng, default_slos as _slos
     from .watch import ConvergenceWatch

@@ -45,6 +45,7 @@ import numpy as np
 
 from ..core.activity import Activity
 from ..obs import convergence as obs_convergence
+from ..obs import explain as obs_explain
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 from ..core.engine import (make_batched_loop, make_dense_step,
@@ -163,11 +164,27 @@ class TenantFleet:
     # -- regime machinery ------------------------------------------------ #
     def _regime_for(self, spec: BucketSpec) -> str:
         if self.backend != "auto":
-            return self.backend
-        if spec.n_pad <= self.dense_max_n:
-            return "dense"
-        import jax
-        return "pallas" if jax.default_backend() == "tpu" else "reference"
+            regime, rule = self.backend, f"backend={self.backend!r} pinned"
+        elif spec.n_pad <= self.dense_max_n:
+            regime = "dense"
+            rule = f"n_pad {spec.n_pad} ≤ dense_max_n {self.dense_max_n}"
+        else:
+            import jax
+            platform = jax.default_backend()
+            regime = "pallas" if platform == "tpu" else "reference"
+            rule = (f"n_pad {spec.n_pad} > dense_max_n {self.dense_max_n}, "
+                    f"platform={platform}")
+        obs_explain.record_decision(
+            "bucket_regime", "TenantFleet._regime_for",
+            inputs=dict(n_pad=int(spec.n_pad), e_pad=int(spec.e_pad),
+                        backend=self.backend,
+                        dense_max_n=self.dense_max_n),
+            chosen=regime, source="model",
+            candidates=[obs_explain.Candidate(
+                name, chosen=(name == regime),
+                detail=(dict(rule=rule) if name == regime else {}))
+                for name in ("dense", "reference", "pallas")])
+        return regime
 
     def _loop_and_epilogue(self, regime: str) -> tuple:
         """The (batched loop, batched epilogue) pair of one regime, built

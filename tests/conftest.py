@@ -1,6 +1,22 @@
 import os
 import sys
 
+import pytest
+
 # tests see the default (1) device count — the 512-device forcing belongs to
 # launch/dryrun.py ONLY. Distributed tests spawn subprocesses instead.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_calibration_store():
+    """Isolate the process-global cost-model calibration store per test.
+
+    The store is planner *input* (it survives ``obs.disable()`` by
+    design), so samples fed by one test — a microbenched plan, an auto
+    engine's step-span timings — would otherwise leak into every later
+    test's plan ranking and cache keys."""
+    from repro.obs import calibrate
+    prev = calibrate.set_store(calibrate.CalibrationStore())
+    yield
+    calibrate.set_store(prev)
